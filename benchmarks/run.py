@@ -1,0 +1,55 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One function per paper table/figure (see paper_benches.py), printed as
+``name,us_per_call,derived`` CSV rows, followed by the roofline summary if
+dry-run artifacts exist (benchmarks/roofline.py builds the full table).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import paper_benches as pb  # noqa: E402
+
+
+BENCHES = [
+    ("fig3a_hysteresis", pb.bench_hysteresis),
+    ("fig3b_ir_drop_22pct", pb.bench_ir_drop),
+    ("fig3cd_leakage_mc", pb.bench_leakage_mc),
+    ("fig4_transient_readout", pb.bench_transient_readout),
+    ("sec5_deepnet_speedup_29pct", pb.bench_deepnet_speedup),
+    ("table1_characteristics", pb.bench_table1),
+    ("engine_crossbar_mac", pb.bench_crossbar_mac),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES:
+        res = fn()
+        us = res.pop("us_per_call", 0.0)
+        derived = json.dumps(res, default=float)
+        print(f"{name},{us:.1f},{derived}")
+
+    # roofline summary (reads experiments/dryrun/*.json if present)
+    try:
+        from benchmarks.roofline import summary_rows
+        rows = summary_rows("experiments/dryrun")
+        if rows:
+            print("\n# roofline (single-pod 16x16; seconds per step)")
+            print("arch,shape,compute_s,memory_s,collective_s,bottleneck,"
+                  "model_flops_ratio,peak_GiB")
+            for r in rows:
+                print(",".join(str(r[k]) for k in (
+                    "arch", "shape", "compute_s", "memory_s",
+                    "collective_s", "bottleneck", "model_flops_ratio",
+                    "peak_gib")))
+    except Exception as e:  # noqa: BLE001
+        print(f"# roofline summary unavailable: {e!r}")
+
+
+if __name__ == "__main__":
+    main()

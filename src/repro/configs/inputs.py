@@ -1,0 +1,87 @@
+"""Abstract input builders for every (architecture x shape) dry-run cell.
+
+``input_specs(cfg, shape)`` returns (kind, args, logical_specs):
+  * kind: "train" | "prefill" | "decode" — which step function to lower,
+  * args: pytree of jax.ShapeDtypeStruct (weak-type-correct, no allocation),
+  * logical_specs: matching pytree of logical-axis tuples for in_shardings.
+
+Modality frontends are stubs per the assignment: whisper gets precomputed
+frame embeddings, qwen2-vl gets precomputed patch embeddings + (t, h, w)
+M-RoPE ids.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec
+from repro.models.model import Model, ModelConfig
+
+VLM_PATCHES = 256
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeSpec
+               ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Training/prefill batch structs + logical specs."""
+    b, s = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        s_text = s - VLM_PATCHES
+        batch["tokens"] = _sds((b, s_text), jnp.int32)
+        specs["tokens"] = ("batch", "seq")
+        batch["vis_emb"] = _sds((b, VLM_PATCHES, cfg.d_model), cfg.dtype)
+        specs["vis_emb"] = ("batch", "seq", "act_embed")
+        batch["positions_thw"] = _sds((b, s, 3), jnp.int32)
+        specs["positions_thw"] = ("batch", "seq", None)
+        if shape.kind == "train":
+            batch["labels"] = _sds((b, s_text), jnp.int32)
+            specs["labels"] = ("batch", "seq")
+    else:
+        batch["tokens"] = _sds((b, s), jnp.int32)
+        specs["tokens"] = ("batch", "seq")
+        if shape.kind == "train":
+            batch["labels"] = _sds((b, s), jnp.int32)
+            specs["labels"] = ("batch", "seq")
+        if cfg.family == "encdec":
+            batch["enc_emb"] = _sds((b, s, cfg.d_model), cfg.dtype)
+            specs["enc_emb"] = ("batch", "seq", "act_embed")
+    return batch, specs
+
+
+def make_cache(model: Model, shape: ShapeSpec):
+    """Abstract cache struct + logical specs for prefill/decode cells."""
+    cfg = model.cfg
+    b, s = shape.global_batch, shape.seq_len
+    kwargs = {}
+    if cfg.family == "encdec":
+        kwargs["src_len"] = s
+        cache = jax.eval_shape(
+            lambda: model.init_cache(b, s, **kwargs))
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    return cache, model.cache_specs()
+
+
+def input_specs(model: Model, shape: ShapeSpec):
+    """(kind, args, logical_specs) for the step function of this cell."""
+    cfg = model.cfg
+    if shape.kind == "train":
+        batch, specs = make_batch(cfg, shape)
+        return "train", (batch,), (specs,)
+    if shape.kind == "prefill":
+        batch, bspecs = make_batch(cfg, shape)
+        cache, cspecs = make_cache(model, shape)
+        return "prefill", (batch, cache), (bspecs, cspecs)
+    # decode: one new token against a seq_len-deep cache
+    b = shape.global_batch
+    tokens = _sds((b, 1), jnp.int32)
+    tspecs = ("batch", None)
+    cache, cspecs = make_cache(model, shape)
+    return "decode", (tokens, cache), (tspecs, cspecs)

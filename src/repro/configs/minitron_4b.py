@@ -1,0 +1,18 @@
+"""minitron-4b [dense]: 32L d_model=3072 24H (GQA kv=8) d_ff=9216
+vocab=256000 — width/depth-pruned nemotron.  [arXiv:2407.14679; hf]
+"""
+from repro.models.model import ModelConfig
+
+# 24 heads do not divide 16-way TP: attention is replicated (FFN TP only,
+# see dryrun.rules_for), so KV replication is unnecessary -> kv_repeat=1
+# (g = 24/8 = 3).  The decode KV cache shards along SEQUENCE instead.
+FULL = ModelConfig(
+    name="minitron-4b", family="dense", n_layers=32, d_model=3072,
+    n_heads=24, n_kv=8, head_dim=128, d_ff=9216, vocab=256000,
+    act="relu2", rope_theta=1e4, kv_repeat=1,
+)
+
+SMOKE = ModelConfig(
+    name="minitron-smoke", family="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv=2, head_dim=16, d_ff=192, vocab=384, act="relu2",
+)

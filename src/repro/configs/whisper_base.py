@@ -1,0 +1,24 @@
+"""whisper-base [audio]: 6L d_model=512 8H (kv=8) d_ff=2048 vocab=51865.
+
+Encoder-decoder with a convolutional audio frontend, which is a STUB here:
+``input_specs`` supplies precomputed mel-frame embeddings (B, S_src, d) —
+per the assignment, only the transformer backbone is modeled.
+[arXiv:2212.04356; unverified]
+
+Attention is tiny (8 heads of 64) relative to the 16-way TP axis, so the
+production rules replicate attention and TP-shard only the FFN (see
+launch/dryrun.py rules overrides).  Full attention -> long_500k skipped.
+"""
+from repro.models.model import ModelConfig
+
+FULL = ModelConfig(
+    name="whisper-base", family="encdec", n_layers=6, d_model=512,
+    n_heads=8, n_kv=8, head_dim=64, d_ff=2048, vocab=51865,
+    act="gelu", norm="ln", rope_theta=1e4, qk_norm=False, kv_repeat=1,
+)
+
+SMOKE = ModelConfig(
+    name="whisper-base-smoke", family="encdec", n_layers=2, d_model=64,
+    n_heads=4, n_kv=4, head_dim=16, d_ff=128, vocab=384,
+    act="gelu", norm="ln", rope_theta=1e4,
+)

@@ -1,0 +1,251 @@
+"""CrossStackEngine — tiles arbitrary matmuls onto stacked crossbar pairs.
+
+This is the bridge between the device-level digital twin and the model zoo:
+any linear layer ``y = x @ W`` can be *programmed* onto a grid of CrossStack
+tiles and executed with bit-exact crossbar arithmetic:
+
+  * K (input/row) dimension   -> tiles of ``tile_rows`` rows per plane.
+      - expansion mode: adjacent row-tiles are stacked onto the two planes
+        and their currents sum in ANALOG on the shared column before the
+        ADC (one conversion per 2*tile_rows rows — the paper's doubled-n).
+      - deep-net mode: one plane is read per beat (ADC per tile_rows rows);
+        the other plane is concurrently programmed (see pipeline.py).
+  * N (output/col) dimension  -> tiles of ``tile_cols`` columns.
+  * weights -> differential single-bit (or multi-bit) cell planes (quant.py).
+  * inputs  -> two's-complement bit-serial pulse trains.
+  * each (tile, slice, pulse) read passes through a saturating ADC before
+    the digital shift-add recombine — quantization error is faithful.
+
+Two execution paths share one ``ProgrammedLinear`` representation:
+  * digital twin (integer-exact; also what kernels/crossbar_mac computes),
+  * analog (conductance domain: device variability, access-transistor R,
+    first-order IR attenuation) for fidelity studies on small layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.quant import QuantConfig
+from repro.core.timing import PAPER, CrossStackParams
+from repro.core import ir_drop
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    tile_rows: int = 128
+    tile_cols: int = 128
+    quant: QuantConfig = QuantConfig()
+    mode: str = "expansion"            # "expansion" | "deepnet"
+    params: CrossStackParams = PAPER
+    use_kernel: bool = False           # route MAC through the Pallas kernel
+    interpret: bool = True             # Pallas interpret mode (CPU container)
+
+    @property
+    def rows_per_adc(self) -> int:
+        """Rows summed in analog before one ADC conversion."""
+        return 2 * self.tile_rows if self.mode == "expansion" else self.tile_rows
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ProgrammedLinear:
+    """Crossbar-resident weights: differential cell-code planes + scales."""
+    pos: jax.Array      # (S, T, R, N_pad) int8 cell codes, T row-tiles
+    neg: jax.Array      # (S, T, R, N_pad) int8
+    w_scale: jax.Array  # (1, N_pad) or scalar
+    k: int              # logical input dim
+    n: int              # logical output dim
+
+    def tree_flatten(self):
+        return (self.pos, self.neg, self.w_scale), (self.k, self.n)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def n_devices(self) -> int:
+        return 2 * int(jnp.size(self.pos))  # pos + neg planes
+
+
+def _pad_to(x: jax.Array, size: int, axis: int) -> jax.Array:
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def program(w: jax.Array, cfg: EngineConfig) -> ProgrammedLinear:
+    """Quantize and map a float (K, N) weight matrix onto crossbar tiles."""
+    k, n = w.shape
+    q = cfg.quant
+    w_int, w_scale = quant.quantize_weights(w, q)
+    r = cfg.tile_rows
+    t = -(-k // r)
+    w_int = _pad_to(w_int, t * r, axis=0)
+    n_pad = -(-n // cfg.tile_cols) * cfg.tile_cols
+    w_int = _pad_to(w_int, n_pad, axis=1)
+    if q.per_channel:
+        w_scale = _pad_to(w_scale, n_pad, axis=1)
+    pos, neg = quant.to_slices(w_int, q)               # (S, T*R, N_pad)
+    s = q.n_slices
+    pos = pos.reshape(s, t, r, n_pad).astype(jnp.int8)
+    neg = neg.reshape(s, t, r, n_pad).astype(jnp.int8)
+    return ProgrammedLinear(pos, neg, w_scale, k, n)
+
+
+# ---------------------------------------------------------------------------
+# Digital-twin execution (integer-exact; oracle for kernels/crossbar_mac)
+# ---------------------------------------------------------------------------
+
+def _adc_codes(acc: jax.Array, cfg: EngineConfig) -> jax.Array:
+    """Saturating ADC in code units.
+
+    acc holds per-column analog sums in [0, rows_per_adc * (base-1)].
+    The ADC maps this to 2**adc_bits uniform levels with clamp; we return
+    the dequantized value on the same scale so recombination is a pure
+    shift-add.
+    """
+    q = cfg.quant
+    base = 2 ** q.bits_per_cell
+    full_scale = cfg.rows_per_adc * (base - 1)
+    levels = 2.0 ** q.adc_bits - 1.0
+    lsb = full_scale / levels
+    code = jnp.clip(jnp.round(acc / lsb), 0.0, levels)
+    return code * lsb
+
+
+def matmul(x: jax.Array, pw: ProgrammedLinear, cfg: EngineConfig
+           ) -> jax.Array:
+    """Bit-exact crossbar execution of ``x @ W`` for x of shape (..., K)."""
+    if cfg.use_kernel:
+        from repro.kernels.crossbar_mac import ops as cb_ops
+        return cb_ops.crossbar_matmul(x, pw, cfg)
+    return matmul_reference(x, pw, cfg)
+
+
+def matmul_reference(x: jax.Array, pw: ProgrammedLinear, cfg: EngineConfig
+                     ) -> jax.Array:
+    q = cfg.quant
+    lead = x.shape[:-1]
+    xb = x.reshape(-1, x.shape[-1])                     # (B, K)
+    x_int, x_scale = quant.quantize_inputs(xb, q)
+    s, t, r, n_pad = pw.pos.shape
+    x_int = _pad_to(x_int, t * r, axis=-1).reshape(-1, t, r)
+    bits = quant.to_bit_serial(x_int, q)                # (b, B, T, R)
+    bitw = quant.bit_weights(q)                         # (b,)
+    slcw = quant.slice_weights(q)                       # (S,)
+
+    pos = pw.pos.astype(jnp.float32)
+    neg = pw.neg.astype(jnp.float32)
+
+    # per (pulse b, slice s, row-tile t): analog column sums
+    acc_p = jnp.einsum("abtr,strn->asbtn", bits, pos)
+    acc_n = jnp.einsum("abtr,strn->asbtn", bits, neg)
+
+    if cfg.mode == "expansion" and t % 2 == 0 and t >= 2:
+        # adjacent row-tiles stacked on the two planes: analog sum first
+        acc_p = acc_p.reshape(*acc_p.shape[:3], t // 2, 2, n_pad).sum(axis=4)
+        acc_n = acc_n.reshape(*acc_n.shape[:3], t // 2, 2, n_pad).sum(axis=4)
+
+    acc_p = _adc_codes(acc_p, cfg)
+    acc_n = _adc_codes(acc_n, cfg)
+
+    y_int = jnp.einsum("asbtn,a,s->bn", acc_p - acc_n, bitw, slcw)
+    y = y_int * x_scale * pw.w_scale[..., :n_pad]
+    return y[:, : pw.n].reshape(*lead, pw.n)
+
+
+def linear(x: jax.Array, w: jax.Array, cfg: EngineConfig) -> jax.Array:
+    """Program-and-run convenience op (QAT / fidelity studies).
+
+    Differentiable end to end via the STE quantizers.
+    """
+    return matmul(x, program(w, cfg), cfg)
+
+
+# ---------------------------------------------------------------------------
+# Analog execution (conductance domain, non-idealities)
+# ---------------------------------------------------------------------------
+
+def matmul_analog(key: Optional[jax.Array], x: jax.Array,
+                  pw: ProgrammedLinear, cfg: EngineConfig,
+                  noise: bool = True, ir_comp: bool = False) -> jax.Array:
+    """Conductance-domain execution with Table-I non-idealities.
+
+    Each (slice, row-tile) is a physical plane pair; cell codes map to
+    conductances in [g_reset, g_set]; inputs map to read voltages; column
+    currents pass a current-domain ADC.  Meant for small fidelity studies
+    (the digital twin is the production path).
+    """
+    p = cfg.params
+    q = cfg.quant
+    lead = x.shape[:-1]
+    xb = x.reshape(-1, x.shape[-1])
+    x_int, x_scale = quant.quantize_inputs(xb, q)
+    s, t, r, n_pad = pw.pos.shape
+    x_int = _pad_to(x_int, t * r, axis=-1).reshape(-1, t, r)
+    bits = quant.to_bit_serial(x_int, q)                 # (b, B, T, R)
+    v_pulses = bits * p.v_read                           # 0 / V_read drives
+
+    g_pos = quant.slices_to_conductance(pw.pos, q, p.g_reset, p.g_set)
+    g_neg = quant.slices_to_conductance(pw.neg, q, p.g_reset, p.g_set)
+    if noise:
+        if key is None:
+            raise ValueError("matmul_analog(noise=True) needs a PRNG key")
+        kp, kn = jax.random.split(key)
+        frac_p = (g_pos - p.g_reset) / (p.g_set - p.g_reset)
+        frac_n = (g_neg - p.g_reset) / (p.g_set - p.g_reset)
+        sig_p = p.r_reset_tol + (p.r_set_tol - p.r_reset_tol) * frac_p
+        sig_n = p.r_reset_tol + (p.r_set_tol - p.r_reset_tol) * frac_n
+        g_pos = g_pos * (1.0 + sig_p * jax.random.normal(kp, g_pos.shape))
+        g_neg = g_neg * (1.0 + sig_n * jax.random.normal(kn, g_neg.shape))
+
+    # access transistor in series
+    g_pos = 1.0 / (1.0 / g_pos + p.r_on_transistor)
+    g_neg = 1.0 / (1.0 / g_neg + p.r_on_transistor)
+
+    i_p = jnp.einsum("abtr,strn->asbtn", v_pulses, g_pos)
+    i_n = jnp.einsum("abtr,strn->asbtn", v_pulses, g_neg)
+
+    if ir_comp:
+        # first-order column attenuation for a nominal all-SET tile
+        g_nom = jnp.full((r, n_pad), p.g_set)
+        atten = ir_drop.attenuation_map(
+            g_nom, jnp.full((r,), p.v_read), p.r_wire)
+        i_p = i_p * atten
+        i_n = i_n * atten
+
+    if cfg.mode == "expansion" and t % 2 == 0 and t >= 2:
+        i_p = i_p.reshape(*i_p.shape[:3], t // 2, 2, n_pad).sum(axis=4)
+        i_n = i_n.reshape(*i_n.shape[:3], t // 2, 2, n_pad).sum(axis=4)
+
+    # current-domain ADC: full scale = every summed cell at G_set, V_read
+    g_fs = 1.0 / (p.r_set + p.r_on_transistor)
+    i_fs = cfg.rows_per_adc * p.v_read * g_fs
+    levels = 2.0 ** q.adc_bits - 1.0
+    lsb = i_fs / levels
+    i_p = jnp.clip(jnp.round(i_p / lsb), 0.0, levels)
+    i_n = jnp.clip(jnp.round(i_n / lsb), 0.0, levels)
+
+    # Convert ADC codes back to cell-code units for the shift-add.  The
+    # differential subtraction cancels the common g_reset pedestal (both
+    # column groups have the same cell count), so one cell-code step
+    # corresponds to the *spacing* conductance, not the absolute one.
+    base = 2 ** q.bits_per_cell
+    g_step = (1.0 / (1.0 / p.g_set + p.r_on_transistor)
+              - 1.0 / (1.0 / p.g_reset + p.r_on_transistor)) / (base - 1)
+    adc_codes_per_cell_code = (p.v_read * g_step) / lsb
+    y_codes = (i_p - i_n) / adc_codes_per_cell_code
+    bitw = quant.bit_weights(q)
+    slcw = quant.slice_weights(q)
+    y_int = jnp.einsum("asbtn,a,s->bn", y_codes, bitw, slcw)
+    y = y_int * x_scale * pw.w_scale[..., :n_pad]
+    return y[:, : pw.n].reshape(*lead, pw.n)

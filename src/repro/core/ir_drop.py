@@ -1,0 +1,269 @@
+"""Resistive-network (IR-drop) model of crossbar read-out.
+
+Full nodal analysis of the row/column wire ladder network:
+
+* ``solve_planar``      — conventional 2-D n x m crossbar,
+* ``solve_crossstack``  — two stacked planes (r x m each) sharing the middle
+                          column electrode (expansion mode, paper Fig. 1a/e).
+
+Geometry and conventions
+------------------------
+Row wires are driven by ideal sources at the j = 0 end and have resistance
+``r_wire`` per cell segment.  Column wires run along the row index and are
+sensed by an ideal transimpedance stage (virtual ground) past the last row
+node.  Every device sits between its row node and its column node, in series
+with the access transistor ON resistance (paper: ~1 kOhm, see timing.py).
+
+In CrossStack expansion mode both planes inject into the *shared* column, so
+for a fixed number of inputs n the column wire passes only n/2 nodes — this
+is the structural origin of the paper's 22 % IR-drop reduction, which
+``benchmarks/bench_ir_drop.py`` reproduces from this solver.
+
+Solvers: dense direct (exact, small arrays) and damped-Jacobi stencil
+iteration (large arrays; also the oracle for the ``ir_solve`` Pallas kernel).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.timing import PAPER
+
+
+def _series(g_dev: jax.Array, r_access: float) -> jax.Array:
+    """Device conductance in series with the access transistor."""
+    return 1.0 / (1.0 / jnp.maximum(g_dev, 1e-12) + r_access)
+
+
+# ---------------------------------------------------------------------------
+# Dense direct solve
+# ---------------------------------------------------------------------------
+
+def _assemble_planar(g: jax.Array, v_in: jax.Array, g_w: float):
+    """Build the (2nm x 2nm) nodal matrix for a planar crossbar.
+
+    Unknown ordering: row nodes (n*m) then column nodes (n*m), row-major.
+    """
+    n, m = g.shape
+    nn = n * m
+
+    def ridx(i, j):
+        return i * m + j
+
+    def cidx(i, j):
+        return nn + i * m + j
+
+    N = 2 * nn
+    A = jnp.zeros((N, N))
+    b = jnp.zeros((N,))
+
+    ii, jj = jnp.meshgrid(jnp.arange(n), jnp.arange(m), indexing="ij")
+    ii, jj = ii.ravel(), jj.ravel()
+    gg = g.ravel()
+
+    def add(A, r, c, val):
+        return A.at[r, c].add(val)
+
+    # device branches: row node <-> column node
+    r_, c_ = ridx(ii, jj), cidx(ii, jj)
+    A = A.at[r_, r_].add(gg)
+    A = A.at[c_, c_].add(gg)
+    A = A.at[r_, c_].add(-gg)
+    A = A.at[c_, r_].add(-gg)
+
+    # row wire segments: (i, j) <-> (i, j+1), plus source at j = 0
+    seg = ii * 0 + 1  # all segments present where j+1 < m
+    mask = jj < m - 1
+    r0, r1 = ridx(ii, jj), ridx(ii, jnp.minimum(jj + 1, m - 1))
+    gmask = jnp.where(mask, g_w, 0.0)
+    A = A.at[r0, r0].add(gmask)
+    A = A.at[r1, r1].add(gmask)
+    A = A.at[r0, r1].add(-gmask)
+    A = A.at[r1, r0].add(-gmask)
+
+    # source: node (i, 0) tied to V_in[i] through one wire segment
+    src = jj == 0
+    gsrc = jnp.where(src, g_w, 0.0)
+    A = A.at[r0, r0].add(gsrc)
+    b = b.at[r0].add(jnp.where(src, g_w * v_in[ii], 0.0))
+
+    # column wire segments: (i, j) <-> (i+1, j), sense ground past i = n-1
+    maskc = ii < n - 1
+    c0, c1 = cidx(ii, jj), cidx(jnp.minimum(ii + 1, n - 1), jj)
+    gmc = jnp.where(maskc, g_w, 0.0)
+    A = A.at[c0, c0].add(gmc)
+    A = A.at[c1, c1].add(gmc)
+    A = A.at[c0, c1].add(-gmc)
+    A = A.at[c1, c0].add(-gmc)
+
+    sense = ii == n - 1
+    gsn = jnp.where(sense, g_w, 0.0)
+    A = A.at[c0, c0].add(gsn)  # tied to 0 V, no b contribution
+    return A, b
+
+
+@partial(jax.jit, static_argnames=("r_access",))
+def solve_planar(g_dev: jax.Array, v_in: jax.Array,
+                 r_wire: float = PAPER.r_wire,
+                 r_access: float = None):
+    """Exact nodal solve of an n x m planar crossbar.
+
+    Returns (i_out, v_row, v_col): per-column sense currents (m,) and the
+    node voltage fields (n, m).
+    """
+    if r_access is None:
+        r_access = PAPER.r_on_transistor
+    n, m = g_dev.shape
+    g = _series(g_dev, r_access)
+    g_w = 1.0 / r_wire
+    A, b = _assemble_planar(g, v_in, g_w)
+    v = jnp.linalg.solve(A, b)
+    v_row = v[: n * m].reshape(n, m)
+    v_col = v[n * m:].reshape(n, m)
+    i_out = g_w * v_col[n - 1, :]  # current into the virtual ground
+    return i_out, v_row, v_col
+
+
+@partial(jax.jit, static_argnames=("r_access",))
+def solve_crossstack(g_top: jax.Array, g_bot: jax.Array,
+                     v_in_top: jax.Array, v_in_bot: jax.Array,
+                     r_wire: float = PAPER.r_wire,
+                     r_access: float = None):
+    """Exact nodal solve of a CrossStack pair (expansion mode).
+
+    Two r x m planes share the column nodes: device (p, i, j) connects row
+    node (p, i, j) to shared column node (i, j).  Unknowns: 2*r*m row nodes
+    (top then bottom) + r*m column nodes.
+
+    Returns (i_out, v_rows, v_col) with v_rows shaped (2, r, m).
+    """
+    if r_access is None:
+        r_access = PAPER.r_on_transistor
+    r, m = g_top.shape
+    gt = _series(g_top, r_access)
+    gb = _series(g_bot, r_access)
+    g_w = 1.0 / r_wire
+    nn = r * m
+
+    def ridx(p, i, j):
+        return p * nn + i * m + j
+
+    def cidx(i, j):
+        return 2 * nn + i * m + j
+
+    N = 3 * nn
+    A = jnp.zeros((N, N))
+    b = jnp.zeros((N,))
+
+    ii, jj = jnp.meshgrid(jnp.arange(r), jnp.arange(m), indexing="ij")
+    ii, jj = ii.ravel(), jj.ravel()
+
+    for p, (gp, vp) in enumerate(((gt, v_in_top), (gb, v_in_bot))):
+        gg = gp.ravel()
+        r_, c_ = ridx(p, ii, jj), cidx(ii, jj)
+        A = A.at[r_, r_].add(gg)
+        A = A.at[c_, c_].add(gg)
+        A = A.at[r_, c_].add(-gg)
+        A = A.at[c_, r_].add(-gg)
+
+        mask = jj < m - 1
+        r0 = ridx(p, ii, jj)
+        r1 = ridx(p, ii, jnp.minimum(jj + 1, m - 1))
+        gmask = jnp.where(mask, g_w, 0.0)
+        A = A.at[r0, r0].add(gmask)
+        A = A.at[r1, r1].add(gmask)
+        A = A.at[r0, r1].add(-gmask)
+        A = A.at[r1, r0].add(-gmask)
+
+        src = jj == 0
+        A = A.at[r0, r0].add(jnp.where(src, g_w, 0.0))
+        b = b.at[r0].add(jnp.where(src, g_w * vp[ii], 0.0))
+
+    maskc = ii < r - 1
+    c0, c1 = cidx(ii, jj), cidx(jnp.minimum(ii + 1, r - 1), jj)
+    gmc = jnp.where(maskc, g_w, 0.0)
+    A = A.at[c0, c0].add(gmc)
+    A = A.at[c1, c1].add(gmc)
+    A = A.at[c0, c1].add(-gmc)
+    A = A.at[c1, c0].add(-gmc)
+
+    sense = ii == r - 1
+    A = A.at[c0, c0].add(jnp.where(sense, g_w, 0.0))
+
+    v = jnp.linalg.solve(A, b)
+    v_rows = v[: 2 * nn].reshape(2, r, m)
+    v_col = v[2 * nn:].reshape(r, m)
+    i_out = g_w * v_col[r - 1, :]
+    return i_out, v_rows, v_col
+
+
+# ---------------------------------------------------------------------------
+# Iterative (Jacobi) solve for large arrays — stencil form
+# ---------------------------------------------------------------------------
+
+def jacobi_planar(g_dev: jax.Array, v_in: jax.Array,
+                  r_wire: float = PAPER.r_wire,
+                  r_access: float | None = None,
+                  n_iter: int = 2000, omega: float = 1.0):
+    """Damped-Jacobi solve of the same planar network, O(n*m) per sweep.
+
+    This stencil form is the oracle for ``kernels/ir_solve`` and scales to
+    large fidelity studies (128 x 128+) where the dense solve is infeasible.
+    """
+    if r_access is None:
+        r_access = PAPER.r_on_transistor
+    n, m = g_dev.shape
+    g = _series(g_dev, r_access)
+    g_w = 1.0 / r_wire
+
+    def sweep(state, _):
+        v_row, v_col = state
+        # row nodes: west neighbour (or source), east neighbour, device
+        west = jnp.concatenate([v_in[:, None], v_row[:, :-1]], axis=1)
+        east_g = jnp.concatenate(
+            [jnp.full((n, m - 1), g_w), jnp.zeros((n, 1))], axis=1)
+        east_v = jnp.concatenate([v_row[:, 1:], jnp.zeros((n, 1))], axis=1)
+        num_r = g_w * west + east_g * east_v + g * v_col
+        den_r = g_w + east_g + g
+        v_row_new = v_row + omega * (num_r / den_r - v_row)
+
+        # column nodes: north neighbour, south neighbour (or ground), device
+        north_g = jnp.concatenate(
+            [jnp.zeros((1, m)), jnp.full((n - 1, m), g_w)], axis=0)
+        north_v = jnp.concatenate([jnp.zeros((1, m)), v_col[:-1, :]], axis=0)
+        south_v = jnp.concatenate([v_col[1:, :], jnp.zeros((1, m))], axis=0)
+        num_c = north_g * north_v + g_w * south_v + g * v_row_new
+        den_c = north_g + g_w + g
+        v_col_new = v_col + omega * (num_c / den_c - v_col)
+        return (v_row_new, v_col_new), ()
+
+    v0 = (jnp.broadcast_to(v_in[:, None], (n, m)).astype(jnp.float32),
+          jnp.zeros((n, m), jnp.float32))
+    (v_row, v_col), _ = jax.lax.scan(sweep, v0, None, length=n_iter)
+    i_out = g_w * v_col[n - 1, :]
+    return i_out, v_row, v_col
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+def ideal_currents(g_dev: jax.Array, v_in: jax.Array) -> jax.Array:
+    """Zero-wire-resistance column currents: i = v^T G (Eq. 1)."""
+    return v_in @ g_dev
+
+
+def ir_drop_loss(i_actual: jax.Array, i_ideal: jax.Array) -> jax.Array:
+    """Per-column relative current loss due to line resistance."""
+    return 1.0 - i_actual / i_ideal
+
+
+def attenuation_map(g_dev: jax.Array, v_in: jax.Array,
+                    r_wire: float = PAPER.r_wire) -> jax.Array:
+    """First-order per-column attenuation used by the engine's fast
+    IR-compensation path: i_actual ~ attenuation * i_ideal for operating
+    points near the calibration inputs."""
+    i_act, _, _ = solve_planar(g_dev, v_in, r_wire)
+    return i_act / ideal_currents(g_dev, v_in)

@@ -1,0 +1,113 @@
+"""Array-level semantics of the two CrossStack operating modes (paper §III).
+
+The read-enable (RE) signal per cell decides where device current flows:
+
+* RE high -> N1 on, N2 off: device couples to the shared column (read).
+* RE low  -> N1 off, N2 on: device path to ground (write), isolated from the
+  column except for N1 subthreshold leakage.
+
+Expansion mode: both planes RE-high -> one logical crossbar with 2n rows on
+an n-node shared column (Eq. 1 with doubled n).
+
+Deep-net mode: complementary RE -> the read plane produces the MAC while the
+write plane is programmed with the *next* layer's weights; its only coupling
+into the read-out is the leakage term.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.timing import PAPER, CrossStackParams
+from repro.core import crossbar, ir_drop
+from repro.core.crossbar import PlaneConfig
+
+
+class StackState(NamedTuple):
+    """A stacked pair of conductance planes plus which one is read-active."""
+    g_top: jax.Array       # (r, m)
+    g_bot: jax.Array       # (r, m)
+    read_top: jax.Array    # bool scalar — deep-net ping-pong selector
+
+
+@dataclasses.dataclass(frozen=True)
+class StackConfig:
+    rows_per_plane: int
+    n_cols: int
+    params: CrossStackParams = PAPER
+
+    @property
+    def plane(self) -> PlaneConfig:
+        return PlaneConfig(self.rows_per_plane, self.n_cols, self.params)
+
+
+# -- expansion mode -----------------------------------------------------------
+
+def expansion_mac(state: StackState, v_top: jax.Array, v_bot: jax.Array,
+                  cfg: StackConfig) -> jax.Array:
+    """i = [v_top; v_bot]^T [G_top; G_bot] — Eq. 1 with n doubled.
+
+    Both planes' RE are identical (high): currents from above and below the
+    shared electrode sum by KCL.
+    """
+    return (crossbar.mac(v_top, state.g_top, cfg.plane)
+            + crossbar.mac(v_bot, state.g_bot, cfg.plane))
+
+
+def expansion_mac_ir(state: StackState, v_top: jax.Array, v_bot: jax.Array,
+                     cfg: StackConfig) -> jax.Array:
+    """Expansion-mode MAC through the exact shared-column nodal solve."""
+    i_out, _, _ = ir_drop.solve_crossstack(
+        state.g_top, state.g_bot, v_top, v_bot, cfg.params.r_wire)
+    return i_out
+
+
+def expansion_program(state: StackState, g_top_new: jax.Array,
+                      g_bot_new: jax.Array) -> StackState:
+    """RE low on both planes: column isolated, both planes written."""
+    return StackState(g_top_new, g_bot_new, state.read_top)
+
+
+# -- deep-net mode -------------------------------------------------------------
+
+def deepnet_read(state: StackState, v_in: jax.Array, cfg: StackConfig,
+                 v_write_other: jax.Array | None = None,
+                 include_leakage: bool = True) -> jax.Array:
+    """Read the active plane while the other is being programmed.
+
+    The write plane contributes only N1 subthreshold leakage into the shared
+    column (paper Fig. 3c: ~2.5 pA/cell, negligible vs the read current).
+    """
+    g_read = jnp.where(state.read_top, state.g_top, state.g_bot)
+    i = crossbar.mac(v_in, g_read, cfg.plane)
+    if include_leakage:
+        if v_write_other is None:
+            v_write_other = jnp.full((cfg.rows_per_plane,),
+                                     cfg.params.v_write)
+        i = i + crossbar.write_plane_leakage(v_write_other, cfg.plane)
+    return i
+
+
+def deepnet_write_inactive(state: StackState, g_new: jax.Array) -> StackState:
+    """Program the *inactive* plane with the next layer's weights."""
+    g_top = jnp.where(state.read_top, state.g_top, g_new)
+    g_bot = jnp.where(state.read_top, g_new, state.g_bot)
+    return StackState(g_top, g_bot, state.read_top)
+
+
+def deepnet_swap(state: StackState) -> StackState:
+    """Flip roles once the concurrent read and write both complete."""
+    return StackState(state.g_top, state.g_bot,
+                      jnp.logical_not(state.read_top))
+
+
+def deepnet_layer(state: StackState, v_in: jax.Array, g_next: jax.Array,
+                  cfg: StackConfig) -> tuple[jax.Array, StackState]:
+    """One full deep-net pipeline beat: read active plane, write next-layer
+    weights into the inactive plane, swap.  Returns (currents, new state)."""
+    i = deepnet_read(state, v_in, cfg)
+    state = deepnet_write_inactive(state, g_next)
+    return i, deepnet_swap(state)

@@ -1,0 +1,157 @@
+"""Weight -> conductance and activation -> voltage quantization.
+
+The paper's array uses conservative single-bit cells ("Restricting each
+memristor to one of two conductance values ... one would require log2(n)
+memristors for n bits of precision", §V) with differential columns for sign,
+and bit-serial inputs (a 10-bit convolution = 10 read pulses of t_read each,
+§IV-B).  This module implements exactly that digital-twin arithmetic:
+
+* weights  -> symmetric int, split into differential (+/-) single-bit planes,
+* inputs   -> two's-complement bit-serial pulse trains,
+* read-out -> per-column ADC with saturation, then signed shift-add recombine.
+
+Multi-bit cells (up to the paper's 3.5-bit variability limit) are supported
+via ``bits_per_cell``.  All quantizers carry straight-through gradients so
+the engine is usable inside QAT training loops.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    w_bits: int = 4          # magnitude bits per differential side
+    in_bits: int = 8         # input bits (two's complement, bit-serial)
+    adc_bits: int = 8        # ADC resolution per column read
+    bits_per_cell: int = 1   # conductance levels per device = 2**bits_per_cell
+    per_channel: bool = True  # per-output-column weight scales
+
+    @property
+    def n_slices(self) -> int:
+        """Cell planes per differential side: ceil(w_bits / bits_per_cell)."""
+        return -(-self.w_bits // self.bits_per_cell)
+
+
+# -- straight-through rounding ----------------------------------------------
+
+@jax.custom_vjp
+def ste_round(x):
+    return jnp.round(x)
+
+
+def _ste_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_bwd(_, g):
+    return (g,)
+
+
+ste_round.defvjp(_ste_fwd, _ste_bwd)
+
+
+# -- weights -----------------------------------------------------------------
+
+def weight_scales(w: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Symmetric quantization scale(s); per output column if per_channel."""
+    qmax = 2.0 ** cfg.w_bits - 1.0
+    if cfg.per_channel:
+        amax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(w))
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
+def quantize_weights(w: jax.Array, cfg: QuantConfig
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """float (K, N) -> signed int in [-qmax, qmax] plus scale(s)."""
+    scale = weight_scales(w, cfg)
+    qmax = 2.0 ** cfg.w_bits - 1.0
+    w_int = jnp.clip(ste_round(w / scale), -qmax, qmax)
+    return w_int, scale
+
+
+def to_slices(w_int: jax.Array, cfg: QuantConfig) -> Tuple[jax.Array, jax.Array]:
+    """Split signed ints into differential single-/multi-bit cell planes.
+
+    Returns (pos_slices, neg_slices), each (n_slices, K, N) holding cell
+    values in [0, 2**bits_per_cell - 1] — i.e. programmed conductance codes.
+    Slice s carries digit s in base 2**bits_per_cell, LSB first.
+    """
+    wp = jnp.maximum(w_int, 0.0).astype(jnp.int32)
+    wn = jnp.maximum(-w_int, 0.0).astype(jnp.int32)
+    base = 2 ** cfg.bits_per_cell
+
+    def digits(x):
+        out = []
+        for s in range(cfg.n_slices):
+            out.append((x // (base ** s)) % base)
+        return jnp.stack(out, axis=0)
+
+    return digits(wp), digits(wn)
+
+
+def slices_to_conductance(slices: jax.Array, cfg: QuantConfig,
+                          g_reset: float, g_set: float) -> jax.Array:
+    """Map cell codes [0, levels-1] to device conductances [g_reset, g_set].
+
+    Linear conductance spacing (standard multi-level-cell programming
+    target; single-bit cells hit exactly {g_reset, g_set})."""
+    levels = 2 ** cfg.bits_per_cell
+    frac = slices.astype(jnp.float32) / (levels - 1)
+    return g_reset + frac * (g_set - g_reset)
+
+
+# -- inputs -------------------------------------------------------------------
+
+def quantize_inputs(x: jax.Array, cfg: QuantConfig
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """float (..., K) -> two's-complement ints in [-2^(b-1), 2^(b-1)-1]."""
+    qmax = 2.0 ** (cfg.in_bits - 1) - 1.0
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-8)
+    scale = amax / qmax
+    x_int = jnp.clip(ste_round(x / scale), -qmax - 1, qmax)
+    return x_int, scale
+
+
+def to_bit_serial(x_int: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Signed int -> (in_bits, ..., K) binary pulse train (two's complement,
+    LSB first).  Each pulse is a 0/V_read row drive; the MSB recombines with
+    weight -2^(b-1) (signed shift-add), which is how the digital twin
+    handles negative activations without a second read phase."""
+    b = cfg.in_bits
+    u = (x_int.astype(jnp.int32) + (1 << b)) % (1 << b)  # two's complement
+    bits = [(u >> s) & 1 for s in range(b)]
+    return jnp.stack(bits, axis=0).astype(jnp.float32)
+
+
+def bit_weights(cfg: QuantConfig) -> jax.Array:
+    """Signed positional weights of the bit-serial pulses, LSB first."""
+    w = [2.0 ** s for s in range(cfg.in_bits - 1)]
+    w.append(-(2.0 ** (cfg.in_bits - 1)))  # MSB of two's complement
+    return jnp.asarray(w, jnp.float32)
+
+
+def slice_weights(cfg: QuantConfig) -> jax.Array:
+    """Positional weights of the cell planes, LSB first."""
+    base = 2 ** cfg.bits_per_cell
+    return jnp.asarray([float(base ** s) for s in range(cfg.n_slices)],
+                       jnp.float32)
+
+
+# -- ADC ----------------------------------------------------------------------
+
+def adc(i_col: jax.Array, cfg: QuantConfig, i_full_scale: float) -> jax.Array:
+    """Uniform ADC with saturation: current -> integer code, STE gradient.
+
+    i_full_scale is the column full-scale current (tile_rows * max cell
+    current); codes occupy [0, 2^adc_bits - 1].
+    """
+    levels = 2.0 ** cfg.adc_bits - 1.0
+    x = jnp.clip(i_col / i_full_scale, 0.0, 1.0) * levels
+    return ste_round(x) / levels * i_full_scale

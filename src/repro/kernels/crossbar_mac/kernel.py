@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: bit-sliced CrossStack crossbar MAC.
+
+One grid step materializes a (block_b x block_n) output tile's contribution
+from one analog row group (``rows_per_adc`` rows — 2*tile_rows in expansion
+mode, tile_rows in deep-net mode).  Inside the body:
+
+  * the DAC happens in-register: the int32 inputs are expanded to
+    two's-complement bit planes with shifts/masks (8x less input traffic
+    than shipping pre-expanded pulse trains from HBM),
+  * per (input bit, cell slice): one MXU matmul (bits x codes, exact in
+    f32), followed by the saturating ADC — the per-conversion nonlinearity
+    is fused in VMEM; nothing round-trips to HBM,
+  * the signed shift-add recombine accumulates into the output block, which
+    is revisited across the row-group grid axis (standard accumulate-over-K
+    pattern; the K axis is marked "arbitrary").
+
+VMEM budget per step (f32 words):
+  x: block_b * rows  +  pos/neg: 2 * S * rows * block_n  +  out: block_b * block_n
+With the default block_b = block_n = 128, rows = 256, S <= 4 this is
+~1.2 MB << 16 MB v5e VMEM, leaving room for the automatic double buffering
+that overlaps the next row-group's DMA with the current matmuls (the
+deep-net read/write overlap, at the kernel level).
+
+The MXU contraction dim is ``rows`` (a multiple of 128 in production
+configs) and the output tile is 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _adc(acc, adc_bits: int, full_scale: float):
+    # NB: divide (not reciprocal-multiply) so rounding at half-LSB points is
+    # bit-identical to ref.py and the engine reference path.
+    levels = 2.0 ** adc_bits - 1.0
+    lsb = full_scale / levels
+    return jnp.clip(jnp.round(acc / lsb), 0.0, levels) * lsb
+
+
+def _kernel(x_ref, pos_ref, neg_ref, out_ref, *, in_bits: int,
+            adc_bits: int, bits_per_cell: int, rows_per_adc: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    base = 2 ** bits_per_cell
+    full_scale = float(rows_per_adc * (base - 1))
+    x = x_ref[...].astype(jnp.int32)                      # (B, R)
+    u = (x + (1 << in_bits)) % (1 << in_bits)             # two's complement
+
+    acc = jnp.zeros_like(out_ref)
+    for p in range(in_bits):
+        bitw = float(2 ** p) if p < in_bits - 1 else -float(2 ** p)
+        xb = ((u >> p) & 1).astype(jnp.float32)           # in-register DAC
+        for s in range(pos_ref.shape[0]):
+            slcw = float(base ** s)
+            ap = jax.lax.dot(xb, pos_ref[s].astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+            an = jax.lax.dot(xb, neg_ref[s].astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+            d = (_adc(ap, adc_bits, full_scale)
+                 - _adc(an, adc_bits, full_scale))
+            acc = acc + (bitw * slcw) * d
+    out_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "in_bits", "adc_bits", "bits_per_cell", "rows_per_adc",
+    "block_b", "block_n", "interpret"))
+def crossbar_mac(x_int, pos, neg, *, in_bits: int, adc_bits: int,
+                 bits_per_cell: int, rows_per_adc: int,
+                 block_b: int = 128, block_n: int = 128,
+                 interpret: bool = True):
+    """x_int (B, K) int32, pos/neg (S, K, N) int8 -> (B, N) f32 code units.
+
+    K must be a multiple of rows_per_adc; B of block_b; N of block_n
+    (ops.py pads).  interpret=True on CPU; False on real TPU.
+    """
+    b, k = x_int.shape
+    s, k2, n = pos.shape
+    assert k == k2 and k % rows_per_adc == 0
+    grid = (b // block_b, n // block_n, k // rows_per_adc)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, in_bits=in_bits, adc_bits=adc_bits,
+                          bits_per_cell=bits_per_cell,
+                          rows_per_adc=rows_per_adc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, rows_per_adc), lambda i, j, t: (i, t)),
+            pl.BlockSpec((s, rows_per_adc, block_n),
+                         lambda i, j, t: (0, t, j)),
+            pl.BlockSpec((s, rows_per_adc, block_n),
+                         lambda i, j, t: (0, t, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x_int, pos, neg)

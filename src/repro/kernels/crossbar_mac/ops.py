@@ -1,0 +1,56 @@
+"""Jitted wrapper: engine-facing entry point for the crossbar MAC kernel.
+
+Handles quantization, padding to kernel-friendly shapes, scale application
+and un-padding, so ``engine.matmul(..., use_kernel=True)`` is a drop-in for
+the jnp reference path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.kernels.crossbar_mac.kernel import crossbar_mac
+
+
+def _pad_axis(x, mult, axis):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def crossbar_matmul(x, pw, cfg):
+    """x (..., K) float, pw: ProgrammedLinear, cfg: EngineConfig -> (..., N)."""
+    q = cfg.quant
+    lead = x.shape[:-1]
+    xb = x.reshape(-1, x.shape[-1])
+    x_int, x_scale = quant.quantize_inputs(xb, q)
+
+    s, t, r, n_pad = pw.pos.shape
+    pos = pw.pos.reshape(s, t * r, n_pad)
+    neg = pw.neg.reshape(s, t * r, n_pad)
+    x_int = _pad_axis(x_int.astype(jnp.int32), t * r, axis=-1)
+
+    rows_per_adc = cfg.rows_per_adc
+    if (t * r) % rows_per_adc != 0:
+        # odd number of row tiles in expansion mode: fall back to per-plane
+        rows_per_adc = r
+
+    block_b = min(128, max(8, x_int.shape[0]))
+    block_n = min(128, n_pad)
+    x_pad = _pad_axis(x_int, block_b, axis=0)
+    pos = _pad_axis(pos, block_n, axis=-1)
+    neg = _pad_axis(neg, block_n, axis=-1)
+
+    y = crossbar_mac(
+        x_pad, pos, neg, in_bits=q.in_bits, adc_bits=q.adc_bits,
+        bits_per_cell=q.bits_per_cell, rows_per_adc=rows_per_adc,
+        block_b=block_b, block_n=min(block_n, pos.shape[-1]),
+        interpret=cfg.interpret)
+
+    y = y[: xb.shape[0], :n_pad]
+    y = y * x_scale * pw.w_scale[..., :n_pad]
+    return y[:, : pw.n].reshape(*lead, pw.n)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the crossbar MAC kernel.
+
+Computes the bit-exact digital twin of a CrossStack tile grid:
+
+  y[b, n] = sum_t sum_s sum_p bitw[p] * slcw[s]
+              * ( ADC( xbits[p, b, t, :] @ pos[s, t, :, n] )
+                - ADC( xbits[p, b, t, :] @ neg[s, t, :, n] ) )
+
+with xbits the two's-complement bit-serial planes of the int inputs and
+ADC the saturating uniform quantizer over [0, rows_per_adc * (base - 1)].
+
+Shapes (code units, no scales — scales are applied by the caller):
+  x_int : (B, T * R) int32   — quantized inputs, row-tiled
+  pos   : (S, T * R, N) int8 — differential cell codes
+  neg   : (S, T * R, N) int8
+Returns (B, N) float32 in integer code units.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def adc(acc, adc_bits: int, full_scale: float):
+    levels = 2.0 ** adc_bits - 1.0
+    lsb = full_scale / levels
+    return jnp.clip(jnp.round(acc / lsb), 0.0, levels) * lsb
+
+
+def crossbar_mac_ref(x_int, pos, neg, *, in_bits: int, adc_bits: int,
+                     bits_per_cell: int, rows_per_adc: int):
+    s, kr, n = pos.shape
+    b = x_int.shape[0]
+    assert kr % rows_per_adc == 0, (kr, rows_per_adc)
+    t = kr // rows_per_adc
+    base = 2 ** bits_per_cell
+    full_scale = float(rows_per_adc * (base - 1))
+
+    u = (x_int.astype(jnp.int32) + (1 << in_bits)) % (1 << in_bits)
+    u = u.reshape(b, t, rows_per_adc)
+    pos = pos.astype(jnp.float32).reshape(s, t, rows_per_adc, n)
+    neg = neg.astype(jnp.float32).reshape(s, t, rows_per_adc, n)
+
+    out = jnp.zeros((b, n), jnp.float32)
+    for p in range(in_bits):
+        bitw = float(2 ** p) if p < in_bits - 1 else -float(2 ** p)
+        xb = ((u >> p) & 1).astype(jnp.float32)          # (B, T, R)
+        for si in range(s):
+            slcw = float(base ** si)
+            ap = jnp.einsum("btr,trn->btn", xb, pos[si])
+            an = jnp.einsum("btr,trn->btn", xb, neg[si])
+            d = adc(ap, adc_bits, full_scale) - adc(an, adc_bits, full_scale)
+            out = out + bitw * slcw * d.sum(axis=1)
+    return out

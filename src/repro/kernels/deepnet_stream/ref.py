@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the deep-net streaming kernel.
+
+"Program" (quantize float weights to differential cell codes) immediately
+followed by "read" (the bit-sliced crossbar MAC) — the composition of
+quant.quantize_weights/to_slices with crossbar_mac_ref, without ever
+materializing the programmed planes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.crossbar_mac.ref import crossbar_mac_ref
+
+
+def deepnet_stream_ref(x_int, w, w_scale, *, w_bits: int, in_bits: int,
+                       adc_bits: int, bits_per_cell: int, rows_per_adc: int):
+    """x_int (B, K) int32, w (K, N) float, w_scale (1, N) -> (B, N) f32.
+
+    Output is in integer code units (input/weight scales applied by caller).
+    """
+    qmax = 2.0 ** w_bits - 1.0
+    w_int = jnp.clip(jnp.round(w / w_scale), -qmax, qmax)
+    wp = jnp.maximum(w_int, 0.0).astype(jnp.int32)
+    wn = jnp.maximum(-w_int, 0.0).astype(jnp.int32)
+    base = 2 ** bits_per_cell
+    n_slices = -(-w_bits // bits_per_cell)
+    pos = jnp.stack([(wp // (base ** s)) % base for s in range(n_slices)])
+    neg = jnp.stack([(wn // (base ** s)) % base for s in range(n_slices)])
+    return crossbar_mac_ref(x_int, pos.astype(jnp.int8),
+                            neg.astype(jnp.int8), in_bits=in_bits,
+                            adc_bits=adc_bits, bits_per_cell=bits_per_cell,
+                            rows_per_adc=rows_per_adc)

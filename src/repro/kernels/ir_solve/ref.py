@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the IR-drop stencil kernel: one damped-Jacobi sweep
+of the planar crossbar ladder network (see core/ir_drop.jacobi_planar —
+this is its inner update, exposed per-sweep for kernel validation)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def jacobi_sweep_ref(v_row, v_col, g, v_in, g_w: float, omega: float):
+    """One sweep. v_row/v_col/g: (n, m); v_in: (n,).  Returns updated
+    (v_row, v_col)."""
+    n, m = g.shape
+    west = jnp.concatenate([v_in[:, None], v_row[:, :-1]], axis=1)
+    east_g = jnp.concatenate([jnp.full((n, m - 1), g_w),
+                              jnp.zeros((n, 1))], axis=1)
+    east_v = jnp.concatenate([v_row[:, 1:], jnp.zeros((n, 1))], axis=1)
+    num_r = g_w * west + east_g * east_v + g * v_col
+    den_r = g_w + east_g + g
+    v_row_new = v_row + omega * (num_r / den_r - v_row)
+
+    north_g = jnp.concatenate([jnp.zeros((1, m)),
+                               jnp.full((n - 1, m), g_w)], axis=0)
+    north_v = jnp.concatenate([jnp.zeros((1, m)), v_col[:-1, :]], axis=0)
+    south_v = jnp.concatenate([v_col[1:, :], jnp.zeros((1, m))], axis=0)
+    num_c = north_g * north_v + g_w * south_v + g * v_row_new
+    den_c = north_g + g_w + g
+    v_col_new = v_col + omega * (num_c / den_c - v_col)
+    return v_row_new, v_col_new

@@ -1,0 +1,411 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (architecture x input-shape)
+cell on the production meshes and record memory / cost / collective
+analyses for EXPERIMENTS.md.
+
+MUST be the process entry point (python -m repro.launch.dryrun ...): the
+XLA_FLAGS line above runs before any jax import anywhere, because jax locks
+the device count on first init.  Smoke tests and benches never import this
+module, so they keep seeing 1 CPU device.
+
+Per cell this lowers the right step function:
+  train_4k     -> train_step (AdamW + bf16 compute, donated state)
+  prefill_32k  -> prefill_step (bf16 weights, cache write-out)
+  decode_32k / long_500k -> serve_step (one token, seq_len-deep cache,
+                            donated cache)
+
+and emits <out>/<arch>__<shape>__<mesh>.json with:
+  memory_analysis (per-device bytes), cost_analysis (flops/bytes, raw and
+  layer-extrapolated — XLA counts a scan body once; see hlo_analysis),
+  per-collective traffic, op histogram, compile wall time.
+"""
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ALIASES, ARCH_IDS, SHAPES, get_config,
+                           shape_applicable)
+from repro.configs.inputs import input_specs
+from repro.distributed import sharding as shd
+from repro.launch import hlo_analysis as hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.policy import (MICROBATCHES as _POLICY_MB,  # noqa: F401
+                                 TRAIN_DTYPES as _POLICY_TD,
+                                 TRAIN_SEQ_PARALLEL as _POLICY_SP,
+                                 microbatches_for)
+from repro.models.model import ModelConfig, build_model
+from repro.train import optimizer as opt
+from repro.train import trainer
+
+
+# ---------------------------------------------------------------------------
+# per-arch / per-shape sharding-rule construction
+# ---------------------------------------------------------------------------
+
+def rules_for(arch: str, shape_name: str, multi_pod: bool,
+              overrides: Optional[Dict[str, Any]] = None
+              ) -> shd.ShardingRules:
+    shape = SHAPES[shape_name]
+    seq_shard = (shape_name == "long_500k")
+    base = dict(shd.fsdp_rules(multi_pod=multi_pod,
+                               seq_shard=seq_shard).rules)
+    a = ALIASES.get(arch, arch).replace("-", "_")
+    if a in ("whisper_base", "minitron_4b"):
+        # whisper: 8 heads of 64; minitron: 24 heads — neither divides the
+        # 16-way TP axis.  Replicate attention, TP the FFN, and shard the
+        # KV cache along the SEQUENCE dim instead (flash-decode style; XLA
+        # inserts the distributed-softmax collectives).
+        for k in ("heads", "kv_heads", "act_heads", "act_kv_heads"):
+            base[k] = None
+        if shape.kind in ("decode", "prefill"):
+            base["kv_seq"] = "model"
+    if a == "rwkv6_3b":
+        base["lin_heads"] = None      # 40 heads !| 16 -> shard dv instead
+        base["lin_dv"] = "model"
+    if a == "zamba2_1p2b":
+        base["ssm_inner"] = "model"
+        base["ssm_heads"] = "model"
+        base["lin_heads"] = "model"   # 64 SSD heads | 16
+        base["lin_dv"] = None
+        base["act_ssm"] = "model"
+    if shape.global_batch == 1:
+        base["batch"] = None          # batch=1: nothing to shard over DP
+    if shape_name == "train_4k" and a in TRAIN_SEQ_PARALLEL:
+        base["seq"] = "model"         # SP on the residual stream
+    if overrides:
+        base.update(overrides)
+    return shd.ShardingRules(rules=base)
+
+
+# dry-run shape-dependent model tweaks: chunked attention for long prefill
+# (bounds the scores working set; unrolled so FLOP accounting stays honest)
+def cfg_for_cell(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    if shape_name == "prefill_32k" and cfg.family in (
+            "dense", "moe", "vlm", "encdec", "zamba2"):
+        cfg = dataclasses.replace(cfg, q_chunk=2048, chunk_unroll=False)
+    if shape_name == "train_4k" and cfg.family in (
+            "dense", "moe", "vlm", "encdec", "zamba2") and cfg.n_heads:
+        # bound the train-time scores working set too
+        cfg = dataclasses.replace(cfg, q_chunk=1024, chunk_unroll=False)
+    if shape_name in ("prefill_32k", "train_4k") and cfg.family in (
+            "rwkv6", "zamba2"):
+        cfg = dataclasses.replace(cfg, lin_chunk=64)
+    if shape_name == "train_4k":
+        # training at 1M tokens/step needs activation rematerialization;
+        # "full" (save block inputs only) is the fits-everywhere baseline —
+        # §Perf revisits the remat/recompute trade per hillclimbed cell.
+        cfg = dataclasses.replace(cfg, remat="full")
+    return cfg
+
+
+# microbatch accumulation per arch for the train cells (activation-memory
+# control at global batch 256 x 4096 = 1M tokens/step; §Perf tunes these)
+# constraint: (global_batch / microbatches) must remain divisible by the
+# DP extent (16 single-pod, 32 multi-pod) or batch sharding degenerates.
+MICROBATCHES = _POLICY_MB
+
+# archs whose train cells additionally shard the residual-stream sequence
+# dim over "model" (Megatron-style sequence parallelism): at d_model 18432
+# the remat-saved layer inputs alone are 96 x 151 MB per device otherwise.
+TRAIN_SEQ_PARALLEL = _POLICY_SP
+
+# optimizer-state / grad-accumulator storage precision per arch: the
+# >=300B cells cannot hold f32 AdamW triples in 256 x 16 GB (4 TB of
+# optimizer state alone) — bf16 moments + bf16 accumulation is the
+# documented large-model trade (moments are upcast inside the update).
+TRAIN_DTYPES = _POLICY_TD
+
+
+# ---------------------------------------------------------------------------
+# step builders (what actually gets lowered)
+# ---------------------------------------------------------------------------
+
+def build_step(model, kind: str, rules: shd.ShardingRules, mesh,
+               opt_cfg: Optional[opt.AdamWConfig] = None,
+               microbatches: int = 1, arch: str = "",
+               unroll_accum: bool = False):
+    """Returns (fn, in_shardings, donate_argnums, arg_structs_fn)."""
+    cfg = model.cfg
+
+    def shard_of(spec_tree_):
+        return jax.tree.map(
+            lambda names: rules.sharding(mesh, names), spec_tree_,
+            is_leaf=lambda x: type(x) is tuple)
+
+    if kind == "train":
+        opt_cfg = opt_cfg or opt.AdamWConfig()
+        opt_dt, acc_dt = TRAIN_DTYPES.get(arch, ("float32", "float32"))
+        step = trainer.make_train_step(
+            model, opt_cfg, microbatches=microbatches,
+            grad_accum_dtype=jnp.dtype(acc_dt),
+            unroll_accum=unroll_accum)
+        state_specs = trainer.state_specs(model)
+        state_specs = trainer.TrainState(
+            params=state_specs.params,
+            opt=opt.OptState(m=state_specs.opt.m, v=state_specs.opt.v,
+                             step=()))
+        state_shard = shard_of(state_specs)
+
+        def structs(batch_struct):
+            st = jax.eval_shape(
+                lambda k: trainer.init_state(model, k,
+                                             jnp.dtype(opt_dt)),
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+            return (st, batch_struct)
+
+        return step, state_shard, (0,), structs
+
+    if kind == "prefill":
+        def prefill_step(params, batch, cache):
+            logits, cache = model.prefill(params, batch, cache)
+            nxt = jnp.argmax(
+                logits[:, -1].astype(jnp.float32), axis=-1)
+            return nxt.astype(jnp.int32), cache
+
+        return prefill_step, None, (2,), None
+
+    def serve_step(params, tokens, cache):
+        logits, cache = model.decode_step(params, tokens, cache)
+        nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return nxt[:, None].astype(jnp.int32), cache
+
+    return serve_step, None, (2,), None
+
+
+def _bf16_params_struct(model):
+    st = jax.eval_shape(model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32
+            and len(s.shape) >= 2 else s.dtype), st)
+
+
+# ---------------------------------------------------------------------------
+# one cell
+# ---------------------------------------------------------------------------
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               n_layers: Optional[int] = None,
+               rule_overrides: Optional[Dict[str, Any]] = None,
+               cfg_overrides: Optional[Dict[str, Any]] = None,
+               microbatches: Optional[int] = None,
+               unroll_accum: bool = False,
+               keep_hlo: bool = False) -> Dict[str, Any]:
+    shape = SHAPES[shape_name]
+    cfg = cfg_for_cell(get_config(arch), shape_name)
+    if n_layers is not None:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    if microbatches is None:
+        a = ALIASES.get(arch, arch).replace("-", "_")
+        microbatches = microbatches_for(a, shape.kind, shape.global_batch,
+                                        multi_pod)
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(arch, shape_name, multi_pod, rule_overrides)
+
+    kind, args, logical = input_specs(model, shape)
+    t0 = time.time()
+    with shd.use_rules(rules, mesh), mesh:
+        a = ALIASES.get(arch, arch).replace("-", "_")
+        step, state_shard, donate, structs = build_step(
+            model, kind, rules, mesh, microbatches=microbatches, arch=a,
+            unroll_accum=unroll_accum)
+
+        def shard_of(tree):
+            return jax.tree.map(
+                lambda names: rules.sharding(mesh, names), tree,
+                is_leaf=lambda x: type(x) is tuple)
+
+        if kind == "train":
+            arg_structs = structs(args[0])
+            in_sh = (state_shard, shard_of(logical[0]))
+            # donated state must come back with identical shardings or the
+            # buffers cannot alias (peak would double)
+            out_sh = (state_shard, None)
+        else:
+            params = _bf16_params_struct(model)
+            param_sh = shard_of(model.param_specs())
+            arg_structs = (params,) + args
+            in_sh = (param_sh,) + tuple(shard_of(l) for l in logical)
+            cache_sh = shard_of(logical[-1])
+            out_sh = (None, cache_sh)
+
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*arg_structs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    txt = compiled.as_text()
+    colls = hlo.collective_bytes(txt)
+    hist = hlo.op_histogram(txt)
+
+    out = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": kind, "n_layers": cfg.n_layers,
+        "microbatches": microbatches,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_per_device": ma.argument_size_in_bytes
+            + ma.output_size_in_bytes + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+        "cost": {"flops": ca.get("flops", 0.0),
+                 "bytes_accessed": ca.get("bytes accessed", 0.0),
+                 "transcendentals": ca.get("transcendentals", 0.0)},
+        "collectives": colls,
+        "collective_bytes_total": sum(v["bytes"] for v in colls.values()),
+        "op_histogram": hist,
+        "hlo_chars": len(txt),
+    }
+    if keep_hlo:
+        out["hlo_text"] = txt
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             extrapolate: bool = True) -> Dict[str, Any]:
+    """Full-depth compile (memory truth) + shallow UNROLLED cost probes.
+
+    XLA cost analysis counts a while-loop body once regardless of trip
+    count, so per-layer costs are measured on 1- and 2-layer UNROLLED
+    variants (scan_layers=False, chunk loops unrolled, microbatches=1):
+
+      flops/bytes:  total = A + (U - 1) * (B - A)
+        (microbatch-independent: splitting the batch reorders the same
+         arithmetic)
+      collectives:  per-layer delta P = B - A mixes the per-microbatch
+        weight gathers g with the once-per-step gradient reduction r; a
+        third probe C at (1 layer, 2 microbatches) isolates g = C - A, so
+          total = A + (U - 1) * P + (mb - 1) * U * g
+
+    with U = layer units (superblocks for zamba) and mb the production
+    microbatch count.
+    """
+    res = lower_cell(arch, shape_name, multi_pod)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if extrapolate:
+        a = ALIASES.get(arch, arch).replace("-", "_")
+        probe_cfg = {"scan_layers": False, "chunk_unroll": True}
+        if cfg.family == "zamba2":
+            d1, d2 = cfg.attn_every, 2 * cfg.attn_every  # 1 vs 2 supers
+            units = (cfg.n_layers // cfg.attn_every
+                     + (cfg.n_layers % cfg.attn_every) / cfg.attn_every)
+        else:
+            d1, d2 = 1, 2
+            units = cfg.n_layers
+        mb_prod = microbatches_for(a, shape.kind, shape.global_batch,
+                                   multi_pod)
+        ra = lower_cell(arch, shape_name, multi_pod, n_layers=d1,
+                        cfg_overrides=probe_cfg, microbatches=1)
+        rb = lower_cell(arch, shape_name, multi_pod, n_layers=d2,
+                        cfg_overrides=probe_cfg, microbatches=1)
+        rc_ = None
+        if shape.kind == "train" and mb_prod > 1:
+            rc_ = lower_cell(arch, shape_name, multi_pod, n_layers=d1,
+                             cfg_overrides=probe_cfg, microbatches=2)
+
+        def metric(r, key):
+            if key == "collective_bytes":
+                return r["collective_bytes_total"]
+            return r["cost"][key]
+
+        true_cost = {}
+        for key in ("flops", "bytes_accessed", "collective_bytes"):
+            A, B = metric(ra, key), metric(rb, key)
+            P = B - A
+            total = A + (units - 1) * P
+            if key == "collective_bytes" and rc_ is not None:
+                g = max(metric(rc_, key) - A, 0.0)  # per-mb weight gathers
+                total += (mb_prod - 1) * units * g
+            true_cost[key] = max(total, metric(ra, key))
+        true_cost["per_layer_flops"] = metric(rb, "flops") - metric(
+            ra, "flops")
+        true_cost["probe_depths"] = [d1, d2]
+        true_cost["microbatches"] = mb_prod
+        res["cost_true"] = true_cost
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_tag}.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-extrapolate", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                if shape_applicable(arch, shape):
+                    cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(ALIASES.get(args.arch, args.arch).replace("-", "_"),
+                  args.shape)]
+
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_tag = "2x16x16" if mp else "16x16"
+            tag = f"{arch} x {shape} x {mesh_tag}"
+            if args.skip_existing and os.path.exists(os.path.join(
+                    args.out, f"{arch}__{shape}__{mesh_tag}.json")):
+                print(f"[SKIP] {tag}", flush=True)
+                continue
+            try:
+                t0 = time.time()
+                res = run_cell(arch, shape, mp, args.out,
+                               extrapolate=not args.no_extrapolate)
+                peak = res["memory"]["peak_bytes_per_device"] / 2**30
+                print(f"[OK]   {tag:55s} peak={peak:7.2f} GiB  "
+                      f"flops={res['cost']['flops']:.3e}  "
+                      f"coll={res['collective_bytes_total']/2**20:9.1f} MiB "
+                      f"({time.time()-t0:.0f}s)", flush=True)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures.append((tag, repr(e)))
+                print(f"[FAIL] {tag:55s} {e!r}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print("\nALL CELLS COMPILED.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""HLO buffer forensics: find what dominates a cell's peak memory.
+
+Usage (must be the process entry point, like dryrun):
+    PYTHONPATH=src python -m repro.launch.forensics --arch whisper-base \
+        --shape decode_32k [--layers 2]
+
+Prints the largest tensors in the partitioned module grouped by shape,
+with their defining op and computation context — the "profile" of the
+dry-run world (DESIGN.md §5): since there is no wall-clock trace, memory
+and collective forensics of the lowered IR are the profiler.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+from collections import Counter
+
+_DT = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+       "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8}
+
+
+def big_buffers(hlo_text: str, min_bytes: float = 100e6, top: int = 24):
+    agg = Counter()
+    example = {}
+    ctx = None
+    for ln in hlo_text.splitlines():
+        if ln.startswith("%") or ln.startswith("ENTRY"):
+            m = re.match(r"(%[\w.\-]+|ENTRY \S+)", ln)
+            if m:
+                ctx = m.group(1)
+        m = re.match(r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*([a-z0-9]+)"
+                     r"\[([\d,]*)\]", ln)
+        if not m:
+            continue
+        name, dt, dims = m.groups()
+        if dt not in _DT or not dims:
+            continue
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        b = n * _DT[dt]
+        if b >= min_bytes:
+            key = f"{dt}[{dims}]"
+            agg[key] += 1
+            if key not in example:
+                op = re.search(r"\]\{?[^=]*?\}?\s+([\w\-]+)\(", ln)
+                example[key] = (b, ctx, op.group(1) if op else "?",
+                                ln.strip()[:110])
+    rows = []
+    for key, cnt in agg.most_common(top):
+        b, ctx, op, ln = example[key]
+        rows.append({"shape": key, "count": cnt, "gib": b / 2**30,
+                     "op": op, "ctx": ctx, "line": ln})
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--min-mb", type=float, default=100.0)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell
+    res = lower_cell(args.arch, args.shape, args.multi_pod,
+                     n_layers=args.layers, keep_hlo=True)
+    txt = res.pop("hlo_text")
+    m = res["memory"]
+    print(f"peak={m['peak_bytes_per_device']/2**30:.2f} GiB  "
+          f"arg={m['argument_bytes']/2**30:.2f} out="
+          f"{m['output_bytes']/2**30:.2f} temp={m['temp_bytes']/2**30:.2f} "
+          f"alias={m['alias_bytes']/2**30:.2f}")
+    for r in big_buffers(txt, args.min_mb * 2**20):
+        print(f"x{r['count']:3d} {r['gib']:7.2f}GiB {r['shape'][:44]:46s} "
+              f"op={r['op'][:18]:18s} ctx={str(r['ctx'])[:40]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""HLO-text analysis: collective-traffic accounting for the roofline.
+
+``compiled.cost_analysis()`` provides FLOPs/bytes but no collective
+breakdown, so we parse the partitioned HLO: every value definition line
+carries its (per-device) shape; for each collective op we sum its operand
+bytes.  Shapes in post-SPMD HLO are per-device, so the totals here are
+per-device collective bytes — exactly the numerator of the roofline's
+collective term when divided by link bandwidth (equivalently: global bytes
+/ (chips * link_bw); see EXPERIMENTS.md §Roofline).
+
+Loop caveat: XLA cost analysis and this parser both count a while-loop
+(lax.scan) body ONCE.  dryrun.py corrects by compiling depth-1 and depth-2
+variants and extrapolating the per-layer delta (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*\(?([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_OP_RE = re.compile(
+    r"=\s*\(?[a-z0-9]+\[[\d,]*\][^)]*?\)?\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(([^)]*)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-type {bytes, count} from partitioned HLO text."""
+    sizes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            name, dtype, dims = m.groups()
+            if dtype in _DTYPE_BYTES:
+                sizes[name] = _shape_bytes(dtype, dims)
+
+    out = defaultdict(lambda: {"bytes": 0.0, "count": 0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            # cheaper pre-filter for non-matching lines
+            continue
+        kind, operands = m.groups()
+        if "-done(" in line:
+            continue  # async completion carries no new payload
+        total = 0
+        for tok in operands.split(","):
+            tok = tok.strip().lstrip("%")
+            tok = tok.split(" ")[0]
+            if tok in sizes:
+                total += sizes[tok]
+        out[kind]["bytes"] += total
+        out[kind]["count"] += 1
+    return dict(out)
+
+
+def total_collective_bytes(hlo_text: str) -> float:
+    return sum(v["bytes"] for v in collective_bytes(hlo_text).values())
+
+
+def op_histogram(hlo_text: str, ops=("fusion", "while", "custom-call",
+                                     "dot", "convolution")) -> Dict[str, int]:
+    hist = {}
+    for op in ops + _COLLECTIVES:
+        hist[op] = len(re.findall(rf"\s{re.escape(op)}(?:\(|\.|\s)",
+                                  hlo_text))
+    return hist
+
+
+def extrapolate(full: float, l1: float, l2: float, n_layers: int,
+                depth1: int = 1, depth2: int = 2) -> float:
+    """Correct loop-body single-counting: cost(L) ~ cost(l1) + (L - d1) * d,
+    with d = (cost(l2) - cost(l1)) / (d2 - d1) measured from two shallow
+    compiles.  ``full`` (the scanned compile) is returned unchanged when it
+    already exceeds the extrapolation (no loop was present)."""
+    delta = (l2 - l1) / max(depth2 - depth1, 1)
+    est = l1 + (n_layers - depth1) * delta
+    return max(full, est)

@@ -1,0 +1,98 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Patch existing dry-run JSONs with honest (unrolled-probe) cost_true
+without redoing the full-depth compiles.
+
+    PYTHONPATH=src python -m repro.launch.probe_costs [--mesh 16x16|both]
+"""
+import argparse
+import json
+import time
+
+from repro.configs import ALIASES, SHAPES, get_config
+from repro.launch.policy import microbatches_for
+
+
+def probe(arch, shape_name, multi_pod, cfg_overrides=None,
+          rule_overrides=None, mb_override=None):
+    from repro.launch.dryrun import lower_cell
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    probe_cfg = {"scan_layers": False, "chunk_unroll": True}
+    if cfg_overrides:
+        probe_cfg = dict(probe_cfg, **cfg_overrides)
+    if cfg.family == "zamba2":
+        d1, d2 = cfg.attn_every, 2 * cfg.attn_every
+        units = (cfg.n_layers // cfg.attn_every
+                 + (cfg.n_layers % cfg.attn_every) / cfg.attn_every)
+    else:
+        d1, d2 = 1, 2
+        units = cfg.n_layers
+    mb = (mb_override if mb_override is not None else
+          microbatches_for(arch, shape.kind, shape.global_batch,
+                           multi_pod))
+    ra = lower_cell(arch, shape_name, multi_pod, n_layers=d1,
+                    cfg_overrides=probe_cfg, microbatches=1,
+                    rule_overrides=rule_overrides, unroll_accum=True)
+    rb = lower_cell(arch, shape_name, multi_pod, n_layers=d2,
+                    cfg_overrides=probe_cfg, microbatches=1,
+                    rule_overrides=rule_overrides, unroll_accum=True)
+    rc_ = None
+    if shape.kind == "train" and mb > 1:
+        rc_ = lower_cell(arch, shape_name, multi_pod, n_layers=d1,
+                         cfg_overrides=probe_cfg, microbatches=2,
+                         rule_overrides=rule_overrides, unroll_accum=True)
+
+    def metric(r, key):
+        return (r["collective_bytes_total"] if key == "collective_bytes"
+                else r["cost"][key])
+
+    out = {}
+    for key in ("flops", "bytes_accessed", "collective_bytes"):
+        A, B = metric(ra, key), metric(rb, key)
+        P = B - A
+        total = A + (units - 1) * P
+        if key == "collective_bytes" and rc_ is not None:
+            g = max(metric(rc_, key) - A, 0.0)
+            total += (mb - 1) * units * g
+        out[key] = max(total, A)
+    out["per_layer_flops"] = metric(rb, "flops") - metric(ra, "flops")
+    out["probe_depths"] = [d1, d2]
+    out["microbatches"] = mb
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16", choices=["16x16", "2x16x16",
+                                                        "both"])
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    meshes = (["16x16", "2x16x16"] if args.mesh == "both"
+              else [args.mesh])
+    from repro.configs import all_cells
+    for arch, shape in all_cells():
+        for mesh in meshes:
+            path = os.path.join(args.dir, f"{arch}__{shape}__{mesh}.json")
+            if not os.path.exists(path):
+                print(f"[miss] {path}")
+                continue
+            with open(path) as f:
+                cell = json.load(f)
+            if "cost_true" in cell:
+                print(f"[skip] {arch} {shape} {mesh}", flush=True)
+                continue
+            t0 = time.time()
+            try:
+                cell["cost_true"] = probe(arch, shape, mesh == "2x16x16")
+                with open(path, "w") as f:
+                    json.dump(cell, f, indent=1)
+                print(f"[ok]   {arch} {shape} {mesh} "
+                      f"({time.time()-t0:.0f}s)", flush=True)
+            except Exception as e:  # noqa: BLE001
+                print(f"[FAIL] {arch} {shape} {mesh}: {e!r}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

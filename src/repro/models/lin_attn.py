@@ -1,0 +1,160 @@
+"""Chunk-parallel linear attention with per-channel data-dependent decay.
+
+Shared machinery for RWKV6 (Finch) and Mamba2 (SSD).  Both are instances of
+the diagonal-gated state recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (state: H x dk x dv)
+    y_t = q_t S_t  (+ u-bonus for RWKV6)
+
+computed here in three numerically safe pieces:
+
+  1. intra-chunk: a depth-L scan (vectorized over all chunks at once) that
+     produces per-position outputs and each chunk's local end state.  Every
+     factor is a product of decays <= 1 — no exploding exp(-cum) terms, the
+     standard failure mode of the (L x L) matrix form when decays are far
+     from 1 (RWKV6 tail channels).
+  2. inter-chunk: jax.lax.associative_scan over (total_decay, local_state)
+     pairs — log-depth, fully counted by XLA cost analysis (no while loop,
+     so dry-run FLOP accounting stays honest; see DESIGN.md §5).
+  3. injection: y_i += (q_i * cumdecay_i) . S_prev(chunk(i)).
+
+Decode is the plain O(1) recurrence on a carried state.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint as lc
+
+
+def chunked_gla(q, k, v, log_w, u: Optional[jax.Array] = None,
+                chunk: int = 16, unroll: bool = True,
+                state0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """q, k, log_w: (B, S, H, dk); v: (B, S, H, dv); u: (H, dk) or None.
+
+    Returns (y: (B, S, H, dv), final_state: (B, H, dk, dv)).
+    log_w must be <= 0 (decay in (0, 1]).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    s_orig = s
+    if s % chunk != 0:
+        # pad with zero k/v (no state contribution) and unit decay
+        # (log_w = 0): the final state is unchanged by padded steps.
+        pad = chunk - s % chunk
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, widths) for a in (q, k, v))
+        log_w = jnp.pad(log_w, widths)
+        s = s + pad
+    nc = s // chunk
+
+    cq = q.reshape(b, nc, chunk, h, dk)
+    ck = k.reshape(b, nc, chunk, h, dk)
+    cv = v.reshape(b, nc, chunk, h, dv)
+    clw = log_w.reshape(b, nc, chunk, h, dk)
+    w = jnp.exp(clw)
+
+    # ---- 1. intra-chunk: depth-L scan over positions, all chunks at once
+    # Read/update order differs between the two users of this kernel:
+    #   Mamba2 (u is None):  S_t = w S_{t-1} + kv;  y_t = q S_t
+    #   RWKV6  (u given):    y_t = q (S_{t-1} + u*kv);  S_t = w S_{t-1} + kv
+    read_before = u is not None
+
+    def step(carry, inp):
+        s_loc = carry                                  # (B, nc, H, dk, dv)
+        qj, kj, vj, wj = inp                           # (B, nc, H, d*)
+        if read_before:
+            yj = jnp.einsum("bnhk,bnhkv->bnhv", qj, s_loc)
+            s_loc = wj[..., None] * s_loc + kj[..., None] * vj[..., None, :]
+        else:
+            s_loc = wj[..., None] * s_loc + kj[..., None] * vj[..., None, :]
+            yj = jnp.einsum("bnhk,bnhkv->bnhv", qj, s_loc)
+        return s_loc, yj
+
+    s0 = jnp.zeros((b, nc, h, dk, dv), q.dtype)
+    s0 = lc(s0, ("batch", None, "lin_heads", None, "lin_dv"))
+    xs = (cq.swapaxes(0, 2).swapaxes(1, 2),            # (L, B, nc, H, dk)
+          ck.swapaxes(0, 2).swapaxes(1, 2),
+          cv.swapaxes(0, 2).swapaxes(1, 2),
+          w.swapaxes(0, 2).swapaxes(1, 2))
+    s_end, y_intra = jax.lax.scan(step, s0, xs,
+                                  unroll=chunk if unroll else 1)
+    y_intra = y_intra.swapaxes(0, 1).swapaxes(1, 2)    # (B, nc, L, H, dv)
+
+    # u-bonus (RWKV6): current token reads (u * k_t) v_t before decaying in
+    if u is not None:
+        bonus = jnp.einsum("bnlhk,hk,bnlhk->bnlh", cq, u, ck)
+        y_intra = y_intra + bonus[..., None] * cv
+
+    # ---- 2. inter-chunk associative scan over (decay, state)
+    total = jnp.exp(clw.sum(axis=2))                   # (B, nc, H, dk)
+
+    def combine(a, c):
+        a_d, a_s = a
+        c_d, c_s = c
+        return a_d * c_d, c_d[..., None] * a_s + c_s
+
+    dec, states = jax.lax.associative_scan(
+        combine, (total, s_end), axis=1)
+    # state BEFORE each chunk: shift right, chunk 0 sees state0 (or zeros)
+    if state0 is None:
+        state0 = jnp.zeros((b, h, dk, dv), q.dtype)
+    prev = jnp.concatenate(
+        [state0[:, None], states[:, :-1]], axis=1)     # (B, nc, H, dk, dv)
+    # account for an incoming state0 flowing into later chunks
+    if states.shape[1] > 1:
+        carry_in = dec[:, :-1, ..., None] * state0[:, None]
+        prev = prev.at[:, 1:].add(carry_in)
+
+    # ---- 3. inject inter-chunk history into per-position outputs
+    cum = jnp.cumsum(clw, axis=2)                      # (B, nc, L, H, dk)
+    if read_before:
+        # S_{t-1} saw decays w_1..w_{t-1} only: exclusive cumulative decay
+        cum = cum - clw
+    q_scaled = cq * jnp.exp(cum)
+    y_inter = jnp.einsum("bnlhk,bnhkv->bnlhv", q_scaled, prev)
+
+    y = (y_intra + y_inter).reshape(b, s, h, dv)[:, :s_orig]
+    final = dec[:, -1, ..., None] * state0 + states[:, -1]
+    return y, final
+
+
+def gla_decode_step(q, k, v, log_w, state, u: Optional[jax.Array] = None):
+    """One-token recurrence.  q/k/log_w: (B, H, dk); v: (B, H, dv);
+    state: (B, H, dk, dv).  Returns (y: (B, H, dv), new_state)."""
+    w = jnp.exp(log_w)
+    kv = k[..., None] * v[..., None, :]
+    new_state = w[..., None] * state + kv
+    if u is not None:   # RWKV6: read S_{t-1} + bonus, then update
+        y = jnp.einsum("bhk,bhkv->bhv", q,
+                       state + u[None, ..., None] * kv)
+    else:               # Mamba2: update, then read
+        y = jnp.einsum("bhk,bhkv->bhv", q, new_state)
+    return y, new_state
+
+
+def naive_gla(q, k, v, log_w, u: Optional[jax.Array] = None,
+              state0: Optional[jax.Array] = None):
+    """O(S) sequential oracle for tests."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    st = (jnp.zeros((b, h, dk, dv), jnp.float32)
+          if state0 is None else state0.astype(jnp.float32))
+    ys = []
+    for t in range(s):
+        w = jnp.exp(log_w[:, t].astype(jnp.float32))
+        kv = k[:, t, ..., None].astype(jnp.float32) * \
+            v[:, t, :, None, :].astype(jnp.float32)
+        if u is not None:
+            ys.append(jnp.einsum("bhk,bhkv->bhv", q[:, t].astype(jnp.float32),
+                                 st + u[None, ..., None] * kv))
+            st = w[..., None] * st + kv
+        else:
+            st = w[..., None] * st + kv
+            ys.append(jnp.einsum("bhk,bhkv->bhv",
+                                 q[:, t].astype(jnp.float32), st))
+    return jnp.stack(ys, axis=1), st

@@ -1,0 +1,205 @@
+"""RWKV6 "Finch": attention-free RNN with data-dependent decay.
+
+Per layer: time-mix (the GLA recurrence with low-rank *data-dependent*
+decay — the Finch signature) + channel-mix (token-shifted squared-ReLU
+FFN).  Simplifications vs the released checkpoints (documented in
+DESIGN.md): static token-shift lerp coefficients for r/k/v/g (Finch makes
+these data-dependent too via a shared LoRA stack); the decay path keeps the
+full dynamic low-rank form since it defines the architecture.
+
+State per layer for decode: (last hidden token-shift states, GLA state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint as lc
+from repro.models import layers as L
+from repro.models.lin_attn import chunked_gla, gla_decode_step
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    d_model: int
+    n_layers: int
+    head_dim: int = 64
+    decay_lora: int = 64
+    ffn_mult: float = 3.5
+    vocab: int = 65536
+    chunk: int = 16
+    chunk_unroll: bool = True
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+    @property
+    def d_ffn(self) -> int:
+        return int(self.d_model * self.ffn_mult)
+
+
+def _n(key, shape, scale):
+    return jax.random.normal(key, shape) * scale
+
+
+def time_mix_init(key, cfg: RWKVConfig):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 10)
+    p = {
+        "mu": 0.5 * jnp.ones((5, d)),            # shift-lerp for r,k,v,w,g
+        "wr": _n(ks[0], (d, h, hd), d ** -0.5),
+        "wk": _n(ks[1], (d, h, hd), d ** -0.5),
+        "wv": _n(ks[2], (d, h, hd), d ** -0.5),
+        "wg": _n(ks[3], (d, h, hd), d ** -0.5),
+        "wo": _n(ks[4], (h, hd, d), (h * hd) ** -0.5),
+        "w0": -6.0 + 5.0 * jnp.linspace(0.0, 1.0, h * hd).reshape(h, hd),
+        "wd_a": _n(ks[5], (d, cfg.decay_lora), d ** -0.5),
+        "wd_b": _n(ks[6], (cfg.decay_lora, h, hd), cfg.decay_lora ** -0.5),
+        "u": _n(ks[7], (h, hd), 0.3),
+        "ln_x": jnp.ones((h * hd,)),
+    }
+    s = {
+        "mu": (None, None),
+        "wr": ("embed", "lin_heads", None),
+        "wk": ("embed", "lin_heads", None),
+        "wv": ("embed", "lin_heads", "lin_dv"),
+        "wg": ("embed", "lin_heads", "lin_dv"),
+        "wo": ("lin_heads", "lin_dv", "embed"),
+        "w0": ("lin_heads", None),
+        "wd_a": ("embed", None),
+        "wd_b": (None, "lin_heads", None),
+        "u": ("lin_heads", None),
+        "ln_x": (None,),
+    }
+    return p, s
+
+
+def _shift(x, last):
+    """Token shift: x_{t-1} (first position sees ``last``, decode carry)."""
+    return jnp.concatenate([last.astype(x.dtype)[:, None], x[:, :-1]],
+                           axis=1)
+
+
+def _decay(p, xw):
+    """Data-dependent decay (Finch): log w = -exp(w0 + lora(xw)) <= 0."""
+    lora = jnp.einsum("bsd,dr,rhk->bshk", xw, p["wd_a"].astype(xw.dtype),
+                      p["wd_b"].astype(xw.dtype))
+    return -jnp.exp(p["w0"].astype(jnp.float32)
+                    + jnp.tanh(lora).astype(jnp.float32) * 0.5)
+
+
+def time_mix(p, cfg: RWKVConfig, x, shift_last, gla_state=None,
+             decode: bool = False):
+    """x: (B, S, d).  Returns (y, (new_shift_last, new_gla_state))."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    xs = _shift(x, shift_last)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + (xs - x) * mu[i] for i in range(5))
+
+    r = jnp.einsum("bsd,dhk->bshk", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xv, p["wv"].astype(x.dtype))
+    g = jnp.einsum("bsd,dhk->bshk", xg, p["wg"].astype(x.dtype))
+    log_w = _decay(p, xw)                                   # (B,S,H,hd) f32
+
+    r = lc(r, ("batch", "seq", "lin_heads", None))
+    v = lc(v, ("batch", "seq", "lin_heads", "lin_dv"))
+
+    u = p["u"].astype(jnp.float32)
+    if decode:
+        y, new_state = gla_decode_step(
+            r[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+            v[:, 0].astype(jnp.float32), log_w[:, 0], gla_state, u)
+        y = y[:, None]
+    else:
+        y, new_state = chunked_gla(
+            r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), log_w, u,
+            chunk=min(cfg.chunk, s), unroll=cfg.chunk_unroll,
+            state0=gla_state)
+    y = y.reshape(b, s, h * hd)
+    y = L.rmsnorm(y, p["ln_x"])                             # group-norm-ish
+    y = y.astype(x.dtype) * jax.nn.silu(g.reshape(b, s, h * hd))
+    out = jnp.einsum("bshk,hkd->bsd", y.reshape(b, s, h, hd),
+                     p["wo"].astype(x.dtype))
+    return lc(out, ("batch", "seq", "act_embed")), (x[:, -1], new_state)
+
+
+def channel_mix_init(key, cfg: RWKVConfig):
+    d, f = cfg.d_model, cfg.d_ffn
+    ks = jax.random.split(key, 3)
+    p = {"mu": 0.5 * jnp.ones((2, d)),
+         "wk": _n(ks[0], (d, f), d ** -0.5),
+         "wv": _n(ks[1], (f, d), f ** -0.5),
+         "wr": _n(ks[2], (d, d), d ** -0.5)}
+    s = {"mu": (None, None), "wk": ("embed", "mlp"),
+         "wv": ("mlp", "embed"), "wr": ("embed", None)}
+    return p, s
+
+
+def channel_mix(p, x, shift_last):
+    xs = _shift(x, shift_last)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    k = lc(k, ("batch", "seq", "act_mlp"))
+    kv = k @ p["wv"].astype(x.dtype)
+    y = jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype)) * kv
+    return lc(y, ("batch", "seq", "act_embed")), x[:, -1]
+
+
+def block_init(key, cfg: RWKVConfig):
+    k1, k2 = jax.random.split(key)
+    tm, tms = time_mix_init(k1, cfg)
+    cm, cms = channel_mix_init(k2, cfg)
+    p = {"ln1": jnp.ones((cfg.d_model,)), "ln2": jnp.ones((cfg.d_model,)),
+         "tm": tm, "cm": cm}
+    s = {"ln1": (None,), "ln2": (None,), "tm": tms, "cm": cms}
+    return p, s
+
+
+def block_specs(cfg: RWKVConfig):
+    """Spec-only twin of block_init (no array materialization)."""
+    tms = {"mu": (None, None), "wr": ("embed", "lin_heads", None),
+           "wk": ("embed", "lin_heads", None),
+           "wv": ("embed", "lin_heads", "lin_dv"),
+           "wg": ("embed", "lin_heads", "lin_dv"),
+           "wo": ("lin_heads", "lin_dv", "embed"),
+           "w0": ("lin_heads", None), "wd_a": ("embed", None),
+           "wd_b": (None, "lin_heads", None), "u": ("lin_heads", None),
+           "ln_x": (None,)}
+    cms = {"mu": (None, None), "wk": ("embed", "mlp"),
+           "wv": ("mlp", "embed"), "wr": ("embed", None)}
+    return {"ln1": (None,), "ln2": (None,), "tm": tms, "cm": cms}
+
+
+def block(p, cfg: RWKVConfig, x, state, decode: bool = False):
+    """state: dict(tm_shift (B,d), cm_shift (B,d), gla (B,H,dk,dv))."""
+    h, st = time_mix(p["tm"], cfg, L.rmsnorm(x, p["ln1"]),
+                     state["tm_shift"], state["gla"], decode=decode)
+    x = x + h
+    h, cm_shift = channel_mix(p["cm"], L.rmsnorm(x, p["ln2"]),
+                              state["cm_shift"])
+    x = x + h
+    new_state = {"tm_shift": st[0], "cm_shift": cm_shift, "gla": st[1]}
+    return x, new_state
+
+
+def init_state(cfg: RWKVConfig, batch: int, dtype=jnp.bfloat16):
+    """Decode state: token-shift carries (activation dtype) + GLA state
+    (always f32 — the recurrence accumulates)."""
+    h, hd = cfg.n_heads, cfg.head_dim
+    return {"tm_shift": jnp.zeros((batch, cfg.d_model), dtype),
+            "cm_shift": jnp.zeros((batch, cfg.d_model), dtype),
+            "gla": jnp.zeros((batch, h, hd, hd), jnp.float32)}
+
+
+def state_specs(cfg: RWKVConfig):
+    return {"tm_shift": ("batch", None), "cm_shift": ("batch", None),
+            "gla": ("batch", "lin_heads", None, "lin_dv")}

@@ -1,0 +1,172 @@
+"""Mamba2 (SSD) blocks and the Zamba2 hybrid layout.
+
+Mamba2: in_proj -> (z, x, B, C, dt); short causal depthwise conv on
+(x, B, C); per-head scalar decay a_t = exp(-exp(A_log) * dt_t); SSD
+recurrence via the shared chunked GLA (decay broadcast over the state dim);
+skip D*x; gated SiLU(z); out_proj.
+
+Zamba2: a stack of Mamba2 blocks with ONE shared full-attention transformer
+block applied every ``attn_every`` layers (weights shared across
+applications, per-application KV caches), following arXiv:2411.15242 (the
+concatenated-embedding LoRA adapters of the released model are simplified
+away — see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint as lc
+from repro.models import layers as L
+from repro.models.lin_attn import chunked_gla, gla_decode_step
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 16
+    chunk_unroll: bool = True
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def _n(key, shape, scale):
+    return jax.random.normal(key, shape) * scale
+
+
+def mamba2_init(key, cfg: Mamba2Config):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.d_state
+    h = cfg.n_heads
+    ks = jax.random.split(key, 6)
+    conv_ch = di + 2 * n
+    p = {
+        "w_in": _n(ks[0], (d, 2 * di + 2 * n + h), d ** -0.5),
+        "conv_w": _n(ks[1], (cfg.conv_width, conv_ch), 0.5),
+        "conv_b": jnp.zeros((conv_ch,)),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.exp(jnp.linspace(
+            jnp.log(1e-3), jnp.log(1e-1), h)))),
+        "d_skip": jnp.ones((h,)),
+        "norm": jnp.ones((di,)),
+        "w_out": _n(ks[2], (di, d), di ** -0.5),
+    }
+    s = {
+        "w_in": ("embed", "ssm_inner"),
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "a_log": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "d_skip": ("ssm_heads",),
+        "norm": ("ssm_inner",),
+        "w_out": ("ssm_inner", "embed"),
+    }
+    return p, s
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv, width W, via W shifted adds (exact, unrollable).
+
+    x: (B, S, C); w: (W, C); conv_state: (B, W-1, C) carry for decode.
+    Returns (y, new_conv_state)."""
+    bsz, s, c = x.shape
+    wd = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((bsz, wd - 1, c), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)             # (B, S+W-1, C)
+    y = b.astype(x.dtype)[None, None]
+    y = y + sum(xp[:, i:i + s] * w[i].astype(x.dtype)[None, None]
+                for i in range(wd))
+    return jax.nn.silu(y), xp[:, -(wd - 1):]
+
+
+def mamba2(p, cfg: Mamba2Config, x, state: Dict[str, Any],
+           decode: bool = False):
+    """x: (B, S, d); state: {"conv": (B, W-1, d_inner+2N), "ssm": (B,H,N,hd)}.
+
+    Returns (y, new_state)."""
+    b, s, d = x.shape
+    di, n, h, hd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+
+    proj = x @ p["w_in"].astype(x.dtype)
+    proj = lc(proj, ("batch", "seq", "act_ssm"))
+    z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   state["conv"])
+    xin, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])        # (B,S,H)
+    log_a = -jnp.exp(p["a_log"])[None, None] * dt            # (B,S,H) <= 0
+
+    # map to GLA form: q=C, k=B (shared across heads), v = dt * x per head
+    xin = xin.reshape(b, s, h, hd)
+    v = (xin.astype(jnp.float32) * dt[..., None])
+    q = jnp.broadcast_to(cmat[:, :, None, :].astype(jnp.float32),
+                         (b, s, h, n))
+    k = jnp.broadcast_to(bmat[:, :, None, :].astype(jnp.float32),
+                         (b, s, h, n))
+    log_w = jnp.broadcast_to(log_a[..., None], (b, s, h, n))
+
+    if decode:
+        y, ssm = gla_decode_step(q[:, 0], k[:, 0], v[:, 0], log_w[:, 0],
+                                 state["ssm"])
+        y = y[:, None]
+    else:
+        y, ssm = chunked_gla(q, k, v, log_w, None,
+                             chunk=min(cfg.chunk, s),
+                             unroll=cfg.chunk_unroll, state0=state["ssm"])
+    y = y + xin.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["w_out"].astype(x.dtype)
+    return (lc(out, ("batch", "seq", "act_embed")),
+            {"conv": conv_state, "ssm": ssm})
+
+
+def mamba2_state(cfg: Mamba2Config, batch: int, dtype=jnp.bfloat16):
+    """conv carry in activation dtype; SSM state in f32 (accumulating)."""
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1,
+                               cfg.d_inner + 2 * cfg.d_state), dtype),
+            "ssm": jnp.zeros((batch, cfg.n_heads, cfg.d_state,
+                              cfg.head_dim), jnp.float32)}
+
+
+def mamba2_state_specs(cfg: Mamba2Config):
+    return {"conv": ("batch", None, "act_ssm"),
+            "ssm": ("batch", "ssm_heads", None, None)}
+
+
+def mamba2_block_init(key, cfg: Mamba2Config):
+    p, s = mamba2_init(key, cfg)
+    return ({"ln": jnp.ones((cfg.d_model,)), "mixer": p},
+            {"ln": (None,), "mixer": s})
+
+
+def mamba2_block_specs(cfg: Mamba2Config):
+    """Spec-only twin of mamba2_block_init (no array materialization)."""
+    mixer = {"w_in": ("embed", "ssm_inner"), "conv_w": (None, "ssm_inner"),
+             "conv_b": ("ssm_inner",), "a_log": ("ssm_heads",),
+             "dt_bias": ("ssm_heads",), "d_skip": ("ssm_heads",),
+             "norm": ("ssm_inner",), "w_out": ("ssm_inner", "embed")}
+    return {"ln": (None,), "mixer": mixer}
+
+
+def mamba2_block(p, cfg: Mamba2Config, x, state, decode=False):
+    h, new_state = mamba2(p["mixer"], cfg, L.rmsnorm(x, p["ln"]), state,
+                          decode=decode)
+    return x + h, new_state

@@ -1,0 +1,246 @@
+"""Decoder-only (dense + MoE) and encoder-decoder transformer stacks.
+
+Layer-stacked parameters + ``lax.scan`` over layers (compile time and HLO
+size independent of depth), with optional rematerialization policies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint as lc
+from repro.models import layers as L
+from repro.models.layers import AttnConfig, MoEConfig
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    attn: AttnConfig
+    d_ff: int
+    act: str = "swiglu"
+    moe: Optional[MoEConfig] = None
+    norm: str = "rms"            # "rms" | "ln"
+    cross_attn: bool = False     # decoder block of an enc-dec model
+
+
+def _norm_init(cfg: BlockConfig, d: int):
+    if cfg.norm == "rms":
+        return L.rmsnorm_init(d)
+    return L.layernorm_init(d)
+
+
+def _norm(cfg: BlockConfig, x, p):
+    if cfg.norm == "rms":
+        return L.rmsnorm(x, p)
+    return L.layernorm(x, p)
+
+
+def block_init(key, cfg: BlockConfig):
+    ks = jax.random.split(key, 5)
+    d = cfg.attn.d_model
+    p: Params = {}
+    s: Params = {}
+    p["ln1"], s["ln1"] = _norm_init(cfg, d)
+    p["attn"], s["attn"] = L.attn_init(ks[0], cfg.attn)
+    p["ln2"], s["ln2"] = _norm_init(cfg, d)
+    if cfg.moe is not None:
+        p["moe"], s["moe"] = L.moe_init(ks[1], d, cfg.d_ff, cfg.moe)
+    else:
+        p["mlp"], s["mlp"] = L.mlp_init(ks[1], d, cfg.d_ff, cfg.act)
+    if cfg.cross_attn:
+        p["ln_x"], s["ln_x"] = _norm_init(cfg, d)
+        p["xattn"], s["xattn"] = L.attn_init(ks[2], cfg.attn)
+    return p, s
+
+
+def block_specs(cfg: BlockConfig) -> Params:
+    """Logical-axis specs of one block, with NO array materialization
+    (param_specs for 300B-scale configs must stay abstract)."""
+    norm_spec = (None,) if cfg.norm == "rms" else {"w": (None,), "b": (None,)}
+    attn_s: Params = {"wq": ("embed", "heads", None),
+                      "wk": ("embed", "kv_heads", None),
+                      "wv": ("embed", "kv_heads", None),
+                      "wo": ("heads", None, "embed")}
+    if cfg.attn.qk_norm:
+        attn_s["q_norm"] = (None,)
+        attn_s["k_norm"] = (None,)
+    s: Params = {"ln1": norm_spec, "attn": attn_s, "ln2": norm_spec}
+    if cfg.moe is not None:
+        s["moe"] = {"router": ("embed", None),
+                    "wi": ("experts", "embed", "expert_mlp"),
+                    "wo": ("experts", "expert_mlp", "embed")}
+        if cfg.moe.act == "swiglu":
+            s["moe"]["wg"] = ("experts", "embed", "expert_mlp")
+    else:
+        s["mlp"] = {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+        if cfg.act == "swiglu":
+            s["mlp"]["wg"] = ("embed", "mlp")
+    if cfg.cross_attn:
+        s["ln_x"] = norm_spec
+        s["xattn"] = dict(attn_s)
+    return s
+
+
+def stack_specs(cfg: BlockConfig) -> Params:
+    return jax.tree.map(lambda names: ("layers",) + names, block_specs(cfg),
+                        is_leaf=lambda x: type(x) is tuple)
+
+
+def block(p, cfg: BlockConfig, x, positions, cache=None, cross_kv=None,
+          cross_len=None):
+    """Pre-norm residual block.  Returns (x, new_cache, aux_loss).
+
+    Megatron-SP gather points: when the residual stream is sequence-sharded
+    ("seq" -> model), the attention/MLP inputs are constrained to
+    "seq_act" (= replicated seq), forcing XLA to all-gather the small
+    ACTIVATIONS over the TP axis instead of un-sharding the (much larger)
+    weights; the residual add then reduce-scatters back.  With the default
+    rules both names map to None and these constraints are no-ops.
+    """
+    def gather_sp(h):
+        return lc(h, ("batch", "seq_act", "act_embed"))
+
+    h, new_cache = L.attention(p["attn"], cfg.attn,
+                               gather_sp(_norm(cfg, x, p["ln1"])),
+                               positions, cache=cache)
+    x = x + lc(h, ("batch", "seq", "act_embed"))
+    if cfg.cross_attn:
+        h, _ = L.attention(p["xattn"], cfg.attn,
+                           gather_sp(_norm(cfg, x, p["ln_x"])),
+                           None, cross_kv=cross_kv, kv_len=cross_len)
+        x = x + lc(h, ("batch", "seq", "act_embed"))
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        h, gates = L.moe_block(p["moe"], gather_sp(_norm(cfg, x, p["ln2"])),
+                               cfg.moe)
+        aux = L.moe_aux_loss(gates)
+    else:
+        h = L.mlp(p["mlp"], gather_sp(_norm(cfg, x, p["ln2"])), cfg.act)
+    return x + lc(h, ("batch", "seq", "act_embed")), new_cache, aux
+
+
+# -- stacked layers ------------------------------------------------------------
+
+def stack_init(key, cfg: BlockConfig, n_layers: int):
+    """Initialize n_layers blocks with stacked (leading 'layers' axis) params."""
+    keys = jax.random.split(key, n_layers)
+    ps = [block_init(k, cfg)[0] for k in keys]
+    _, spec = block_init(keys[0], cfg)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+    spec = jax.tree.map(lambda names: ("layers",) + names, spec,
+                        is_leaf=lambda x: type(x) is tuple)
+    return stacked, spec
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(policy)
+
+
+def stack_apply(stacked_p, cfg: BlockConfig, x, positions, caches=None,
+                cross_kv=None, cross_len=None, remat: str = "none",
+                scan: bool = True):
+    """Scan the block over the stacked layer params.
+
+    caches: stacked per-layer caches (dict of (L, ...) arrays) or None.
+    The cache rides in the scan CARRY and is updated in place with
+    dynamic_update_index — XLA keeps one buffer alive (donation-friendly);
+    threading it through xs/ys would materialize a second full KV cache.
+    cross_kv: stacked (k, v) of shape (L, B, S_src, H, hd) or None.
+    scan=False unrolls the layer loop (used by the dry-run cost probes:
+    XLA cost analysis counts a while body once, so per-layer FLOPs are
+    measured on shallow UNROLLED variants — DESIGN.md §5).
+    Returns (x, new_caches, total_aux).
+    """
+    has_cache = caches is not None
+    if not scan:
+        n_layers = jax.tree.leaves(stacked_p)[0].shape[0]
+        aux = jnp.zeros((), jnp.float32)
+        new_caches = caches
+
+        def one_layer(p_l, xc, cache_l, xkv_l):
+            return block(p_l, cfg, xc, positions, cache=cache_l,
+                         cross_kv=xkv_l, cross_len=cross_len)
+
+        one_layer = _remat(one_layer, remat)  # keep remat semantics so the
+        # unrolled cost probes see the same recompute the scan incurs
+        for l in range(n_layers):
+            p_l = jax.tree.map(lambda a: a[l], stacked_p)
+            cache_l = (jax.tree.map(lambda c: c[l], new_caches)
+                       if has_cache else None)
+            xkv_l = (jax.tree.map(lambda a: a[l], cross_kv)
+                     if cross_kv is not None else None)
+            x, new_cache, a = one_layer(p_l, x, cache_l, xkv_l)
+            aux = aux + a
+            if has_cache:
+                new_caches = jax.tree.map(
+                    lambda c, nc, ll=l: c.at[ll].set(nc.astype(c.dtype)),
+                    new_caches, new_cache)
+        return x, new_caches, aux
+
+    def body(carry, per_layer):
+        xc, aux, cch, idx = carry
+        p_l, xkv_l = per_layer
+        cache_l = (jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, idx, 0,
+                                                   keepdims=False), cch)
+            if has_cache else None)
+        xo, new_cache, a = block(p_l, cfg, xc, positions, cache=cache_l,
+                                 cross_kv=xkv_l, cross_len=cross_len)
+        if has_cache:
+            cch = jax.tree.map(
+                lambda c, nc: jax.lax.dynamic_update_index_in_dim(
+                    c, nc.astype(c.dtype), idx, 0), cch, new_cache)
+        return (xo, aux + a, cch, idx + 1), ()
+
+    body = _remat(body, remat)
+    (x, aux, new_caches, _), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32), caches, jnp.int32(0)),
+        (stacked_p, cross_kv))
+    return x, new_caches, aux
+
+
+# -- embeddings / head ----------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int, tie: bool = False):
+    p = {"tok": jax.random.normal(key, (vocab, d_model)) * 0.02}
+    s = {"tok": ("vocab", "embed")}
+    return p, s
+
+
+def embed(p, tokens):
+    e = jnp.take(p["tok"], tokens, axis=0)
+    return lc(e, ("batch", "seq", "act_embed"))
+
+
+def unembed(p, x, head=None):
+    w = head if head is not None else p["tok"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    return lc(logits, ("batch", None, "vocab"))
+
+
+def xent_loss(logits, labels, mask=None, vocab: Optional[int] = None):
+    """Cross entropy with f32 accumulation over a (possibly padded) vocab."""
+    lg = logits.astype(jnp.float32)
+    if vocab is not None and vocab < lg.shape[-1]:
+        pad = lg.shape[-1] - vocab
+        neg = jnp.full((pad,), -1e30, jnp.float32)
+        lg = lg + jnp.concatenate([jnp.zeros((vocab,)), neg])
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,132 @@
+"""Paper-claim and core-physics tests (device, IR drop, modes, pipeline)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ir_drop as ird
+from repro.core import pipeline as pipe
+from repro.core.device import (MemristorModel, hysteresis_loop,
+                               transistor_leakage)
+from repro.core.timing import PAPER, deepnet_speedup
+
+
+class TestDevice:
+    def test_pinched_hysteresis(self):
+        """Paper Fig. 3a: loop passes through the origin, nonzero area."""
+        v, i, w = hysteresis_loop(n_cycles=2, samples_per_cycle=1024)
+        v, i = np.asarray(v), np.asarray(i)
+        near0 = np.abs(v) < 0.01
+        assert np.abs(i[near0]).max() < 0.05 * np.abs(i).max()
+        half = len(v) // 2
+        assert abs(np.trapezoid(i[half:], v[half:])) > 0.0
+
+    def test_resistance_corners(self):
+        m = MemristorModel()
+        assert float(m.resistance(jnp.float32(1.0))) == pytest.approx(PAPER.r_set)
+        assert float(m.resistance(jnp.float32(0.0))) == pytest.approx(PAPER.r_reset)
+
+    def test_write_pulse_switches_device(self):
+        """t_write = 250 ns at V_write must move the state substantially."""
+        m = MemristorModel()
+        assert float(m.program(jnp.float32(0.02), PAPER.v_write)) > 0.7
+        assert float(m.program(jnp.float32(0.98), -PAPER.v_write)) < 0.3
+
+    def test_program_verify_converges(self):
+        m = MemristorModel()
+        g_target = 1.0 / 30e3
+        w, _ = m.program_verify(jnp.float32(0.1), jnp.float32(g_target),
+                                n_pulses=48, n_steps=16)
+        r = 1.0 / float(m.conductance(w))
+        assert r == pytest.approx(30e3, rel=0.25)
+
+    def test_single_cell_read_current_paper_c4(self):
+        """Paper: 39.6 nA measured vs 40 nA ideal (1 % off) at 4 mV."""
+        i = 0.004 / (PAPER.r_reset + PAPER.r_on_transistor)
+        assert i * 1e9 == pytest.approx(39.6, rel=0.01)
+
+    def test_worst_case_leakage_paper_c3(self):
+        """Paper Fig. 3c: ~2.5 pA/cell at V_ds = V_write, gate low."""
+        leak = float(transistor_leakage(jnp.float32(PAPER.v_write),
+                                        jnp.float32(0.0)))
+        assert leak == pytest.approx(2.5e-12, rel=0.05)
+        # 10-cell column: 25 pA = 6.3e-2 % of the worst-case read current
+        col = 10 * leak
+        i_read_worst = PAPER.v_read / (PAPER.r_set + PAPER.r_on_transistor)
+        # paper normalizes against the 40 uA-scale column read; a single
+        # worst-case cell read is ~45 uA/10 cells -> use column read
+        frac = col / (10 * 0.004 / (PAPER.r_reset + PAPER.r_on_transistor))
+        assert frac < 1e-3  # "negligible"
+
+
+class TestIRDrop:
+    def test_jacobi_matches_direct(self):
+        g = jnp.full((12, 8), PAPER.g_set)
+        v = jnp.full((12,), PAPER.v_write)
+        i_d, _, _ = ird.solve_planar(g, v)
+        i_j, _, _ = ird.jacobi_planar(g, v, n_iter=3000)
+        assert jnp.max(jnp.abs(i_j - i_d) / i_d) < 1e-3
+
+    def test_currents_droop_with_distance(self):
+        """Fig. 3b: columns farther from the drivers read lower current."""
+        g = jnp.full((16, 16), PAPER.g_set)
+        v = jnp.full((16,), PAPER.v_write)
+        i_out, _, _ = ird.solve_planar(g, v)
+        assert bool(jnp.all(jnp.diff(i_out) < 0))
+
+    def test_expansion_reduces_ir_drop_22pct_paper_c1(self):
+        """Paper claim C1: ~22 % lower line loss at fixed input count."""
+        n, m = 20, 20
+        g = jnp.full((n, m), PAPER.g_set)
+        v = jnp.full((n,), PAPER.v_write)
+        g_ser = 1.0 / (1.0 / g + PAPER.r_on_transistor)
+        i_ideal = ird.ideal_currents(g_ser, v)
+        i_pl, _, _ = ird.solve_planar(g, v)
+        gt = jnp.full((n // 2, m), PAPER.g_set)
+        vt = jnp.full((n // 2,), PAPER.v_write)
+        i_cs, _, _ = ird.solve_crossstack(gt, gt, vt, vt)
+        loss_pl = ird.ir_drop_loss(i_pl, i_ideal).mean()
+        loss_cs = ird.ir_drop_loss(i_cs, i_ideal).mean()
+        reduction = 1.0 - float(loss_cs / loss_pl)
+        assert reduction == pytest.approx(0.22, abs=0.03)
+
+    def test_crossstack_equals_planar_at_zero_wire_r(self):
+        """With no wire resistance the two geometries are identical MACs."""
+        key = jax.random.PRNGKey(0)
+        g = jax.random.uniform(key, (8, 6), minval=PAPER.g_reset,
+                               maxval=PAPER.g_set)
+        v = jnp.full((8,), PAPER.v_read)
+        i_pl, _, _ = ird.solve_planar(g, v, 1e-9)
+        i_cs, _, _ = ird.solve_crossstack(g[:4], g[4:], v[:4], v[4:], 1e-9)
+        assert jnp.allclose(i_pl, i_cs, rtol=1e-4)
+
+
+class TestDeepNetPipeline:
+    def test_speedup_29pct_paper_c2(self):
+        """Paper claim C2: 29 % faster per 10-bit convolution."""
+        assert deepnet_speedup(10) == pytest.approx(0.29, abs=0.01)
+        assert pipe.speedup(200, 10) == pytest.approx(0.29, abs=0.01)
+
+    def test_schedule_validity(self):
+        for n_layers in [1, 2, 3, 7, 32]:
+            for bits in [1, 4, 10, 16, 32]:
+                pipe.deepnet_schedule(n_layers, bits).validate()
+
+    def test_deepnet_never_slower(self):
+        for n_layers in [1, 2, 5, 50]:
+            for bits in [1, 8, 10, 40]:
+                s = pipe.serial_schedule(n_layers, bits)
+                d = pipe.deepnet_schedule(n_layers, bits)
+                assert d.total <= s.total + 1e-12
+
+    def test_read_dominated_regime(self):
+        """When b*t_read > t_write the pipeline hides the write instead."""
+        bits = 100  # 1000 ns read >> 250 ns write
+        s = pipe.speedup(1000, bits)
+        expected = 1.0 - max(PAPER.t_write, bits * PAPER.t_read) / (
+            PAPER.t_write + bits * PAPER.t_read)
+        assert s == pytest.approx(expected, abs=0.01)
+
+    def test_streaming_speedup_model(self):
+        assert pipe.streaming_speedup(1.0, 1.0, 1000) == pytest.approx(0.5, abs=0.01)
+        assert pipe.streaming_speedup(3.0, 1.0, 1000) == pytest.approx(0.25, abs=0.01)

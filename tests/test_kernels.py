@@ -1,0 +1,109 @@
+"""Per-kernel allclose tests vs the pure-jnp oracles, swept over shapes,
+dtypes and quantization configs (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import engine as eng
+from repro.core import quant
+from repro.core.quant import QuantConfig
+from repro.kernels.crossbar_mac.kernel import crossbar_mac
+from repro.kernels.crossbar_mac.ref import crossbar_mac_ref
+from repro.kernels.deepnet_stream.kernel import deepnet_stream
+from repro.kernels.deepnet_stream.ops import stream_linear
+from repro.kernels.deepnet_stream.ref import deepnet_stream_ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _codes(key, shape, base):
+    return jax.random.randint(key, shape, 0, base).astype(jnp.int8)
+
+
+SWEEP = [
+    # (B, K, N, S, in_bits, adc_bits, bits_per_cell, rows_per_adc)
+    (8, 64, 32, 3, 8, 8, 1, 32),
+    (4, 32, 16, 1, 4, 6, 1, 16),
+    (8, 128, 32, 4, 8, 12, 1, 64),
+    (2, 48, 8, 2, 6, 10, 2, 16),   # multi-bit cells
+    (16, 64, 64, 2, 8, 8, 2, 32),
+]
+
+
+@pytest.mark.parametrize("b,k,n,s,ib,ab,bpc,rpa", SWEEP)
+def test_crossbar_mac_matches_ref(b, k, n, s, ib, ab, bpc, rpa):
+    key = jax.random.PRNGKey(b * 1000 + k)
+    k1, k2, k3 = jax.random.split(key, 3)
+    lo, hi = -(2 ** (ib - 1)), 2 ** (ib - 1)
+    x_int = jax.random.randint(k1, (b, k), lo, hi).astype(jnp.int32)
+    base = 2 ** bpc
+    pos = _codes(k2, (s, k, n), base)
+    neg = _codes(k3, (s, k, n), base)
+    kw = dict(in_bits=ib, adc_bits=ab, bits_per_cell=bpc, rows_per_adc=rpa)
+    ref = crossbar_mac_ref(x_int, pos, neg, **kw)
+    out = crossbar_mac(x_int, pos, neg, block_b=min(b, 8), block_n=min(n, 32),
+                       interpret=True, **kw)
+    # tolerance: one ADC LSB accumulated per row-group and slice
+    lsb = rpa * (base - 1) / (2.0 ** ab - 1.0)
+    tol = lsb * (k // rpa) * s * 4 + 1e-3
+    assert jnp.max(jnp.abs(out - ref)) <= tol
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,k,n", [(8, 64, 32), (4, 96, 16)])
+def test_deepnet_stream_matches_ref(b, k, n, dtype):
+    key = jax.random.PRNGKey(k + n)
+    k1, k2 = jax.random.split(key)
+    x_int = jax.random.randint(k1, (b, k), -128, 128).astype(jnp.int32)
+    w = (jax.random.normal(k2, (k, n)) * 0.4).astype(dtype)
+    q = QuantConfig(w_bits=4, in_bits=8, adc_bits=10)
+    ws = quant.weight_scales(w.astype(jnp.float32), q)
+    kw = dict(w_bits=4, in_bits=8, adc_bits=10, bits_per_cell=1,
+              rows_per_adc=32)
+    ref = deepnet_stream_ref(x_int, w.astype(jnp.float32), ws, **kw)
+    out = deepnet_stream(x_int, w.astype(jnp.float32), ws.astype(jnp.float32),
+                         block_b=min(b, 8), block_n=min(n, 32),
+                         interpret=True, **kw)
+    assert jnp.max(jnp.abs(out - ref)) <= 0.05
+
+
+def test_engine_kernel_path_matches_reference_path():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (96, 80)) * 0.3
+    x = jax.random.normal(jax.random.PRNGKey(5), (16, 96))
+    for mode in ["expansion", "deepnet"]:
+        qc = QuantConfig(w_bits=4, in_bits=8, adc_bits=10)
+        cfg_r = eng.EngineConfig(tile_rows=32, tile_cols=64, mode=mode,
+                                 quant=qc)
+        cfg_k = eng.EngineConfig(tile_rows=32, tile_cols=64, mode=mode,
+                                 quant=qc, use_kernel=True)
+        pw = eng.program(w, cfg_r)
+        y_r = eng.matmul(x, pw, cfg_r)
+        y_k = eng.matmul(x, pw, cfg_k)
+        assert jnp.allclose(y_r, y_k, atol=1e-4), mode
+
+
+def test_stream_linear_matches_engine_linear():
+    x = jax.random.normal(jax.random.PRNGKey(8), (16, 96))
+    w = jax.random.normal(jax.random.PRNGKey(9), (96, 80)) * 0.3
+    cfg = eng.EngineConfig(tile_rows=32, tile_cols=64, mode="deepnet",
+                           quant=QuantConfig(w_bits=4, in_bits=8,
+                                             adc_bits=10))
+    assert jnp.allclose(stream_linear(x, w, cfg), eng.linear(x, w, cfg),
+                        atol=1e-4)
+
+
+def test_kernel_nonaligned_shapes_via_ops():
+    """ops.py must pad/unpad odd shapes correctly."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 70))
+    w = jax.random.normal(jax.random.PRNGKey(2), (70, 33)) * 0.5
+    qc = QuantConfig(w_bits=4, in_bits=8, adc_bits=12)
+    cfg_k = eng.EngineConfig(tile_rows=32, tile_cols=32, mode="deepnet",
+                             quant=qc, use_kernel=True)
+    cfg_r = eng.EngineConfig(tile_rows=32, tile_cols=32, mode="deepnet",
+                             quant=qc)
+    pw = eng.program(w, cfg_r)
+    y_k = eng.matmul(x, pw, cfg_k)
+    y_r = eng.matmul(x, pw, cfg_r)
+    assert y_k.shape == (5, 33)
+    assert jnp.allclose(y_k, y_r, atol=1e-4)

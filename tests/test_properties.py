@@ -1,0 +1,157 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine as eng
+from repro.core import pipeline as pipe
+from repro.core import quant
+from repro.core.quant import QuantConfig
+from repro.core.timing import CrossStackParams, PAPER
+from repro.models.lin_attn import chunked_gla, naive_gla
+
+SET = settings(max_examples=20, deadline=None)
+
+
+class TestQuantProperties:
+    @SET
+    @given(st.integers(2, 8), st.integers(1, 2), st.integers(0, 2**31 - 1))
+    def test_slices_reconstruct_weights(self, w_bits, bpc, seed):
+        """Differential bit slices must reconstruct the signed ints."""
+        cfg = QuantConfig(w_bits=w_bits, bits_per_cell=bpc)
+        key = jax.random.PRNGKey(seed)
+        qmax = 2 ** w_bits - 1
+        w_int = jax.random.randint(key, (9, 7), -qmax, qmax + 1)
+        pos, neg = quant.to_slices(w_int.astype(jnp.float32), cfg)
+        base = 2 ** bpc
+        weights = jnp.asarray([base ** s for s in range(cfg.n_slices)])
+        recon = (jnp.einsum("skn,s->kn", pos.astype(jnp.int32), weights)
+                 - jnp.einsum("skn,s->kn", neg.astype(jnp.int32), weights))
+        assert jnp.array_equal(recon, w_int)
+
+    @SET
+    @given(st.integers(2, 8), st.integers(0, 2**31 - 1))
+    def test_bit_serial_reconstructs_inputs(self, in_bits, seed):
+        cfg = QuantConfig(in_bits=in_bits)
+        key = jax.random.PRNGKey(seed)
+        lo, hi = -(2 ** (in_bits - 1)), 2 ** (in_bits - 1)
+        x_int = jax.random.randint(key, (5, 11), lo, hi)
+        bits = quant.to_bit_serial(x_int, cfg)
+        bw = quant.bit_weights(cfg)
+        recon = jnp.einsum("bij,b->ij", bits, bw)
+        assert jnp.array_equal(recon.astype(jnp.int32), x_int)
+
+    @SET
+    @given(st.integers(2, 8), st.integers(0, 2**31 - 1))
+    def test_weight_quantization_error_bound(self, w_bits, seed):
+        cfg = QuantConfig(w_bits=w_bits)
+        key = jax.random.PRNGKey(seed)
+        w = jax.random.normal(key, (16, 8))
+        w_int, scale = quant.quantize_weights(w, cfg)
+        err = jnp.abs(w_int * scale - w)
+        assert float(err.max()) <= float(scale.max()) * 0.5 + 1e-6
+
+    @SET
+    @given(st.integers(4, 12), st.floats(0.1, 100.0),
+           st.integers(0, 2**31 - 1))
+    def test_adc_is_bounded_and_monotone(self, adc_bits, fs, seed):
+        cfg = QuantConfig(adc_bits=adc_bits)
+        x = jnp.sort(jax.random.uniform(jax.random.PRNGKey(seed), (64,),
+                                        minval=-fs, maxval=2 * fs))
+        y = quant.adc(x, cfg, fs)
+        assert float(y.min()) >= 0.0 and float(y.max()) <= fs + 1e-5
+        assert bool(jnp.all(jnp.diff(y) >= -1e-6))  # monotone
+
+
+class TestEngineProperties:
+    @SET
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([16, 32]),
+           st.sampled_from(["expansion", "deepnet"]))
+    def test_error_shrinks_with_bits(self, seed, tile, mode):
+        key = jax.random.PRNGKey(seed)
+        w = jax.random.normal(key, (64, 48)) * 0.4
+        x = jax.random.normal(jax.random.PRNGKey(seed + 1), (4, 64))
+        ref = x @ w
+        errs = []
+        for bits in (2, 4, 8):
+            cfg = eng.EngineConfig(tile_rows=tile, tile_cols=48, mode=mode,
+                                   quant=QuantConfig(w_bits=bits, in_bits=8,
+                                                     adc_bits=12))
+            y = eng.linear(x, w, cfg)
+            errs.append(float(jnp.abs(y - ref).max()))
+        assert errs[2] <= errs[1] <= errs[0] * 1.5 + 1e-3
+
+    @SET
+    @given(st.integers(0, 2**31 - 1))
+    def test_expansion_equals_deepnet_at_high_adc(self, seed):
+        """With a saturating-free ADC the two modes compute the same MAC
+        (they differ only in which rows share one analog conversion)."""
+        key = jax.random.PRNGKey(seed)
+        w = jax.random.normal(key, (64, 32)) * 0.3
+        x = jax.random.normal(jax.random.PRNGKey(seed + 9), (3, 64))
+        outs = []
+        for mode in ("expansion", "deepnet"):
+            cfg = eng.EngineConfig(tile_rows=32, tile_cols=32, mode=mode,
+                                   quant=QuantConfig(w_bits=6, in_bits=8,
+                                                     adc_bits=16))
+            outs.append(eng.linear(x, w, cfg))
+        assert jnp.allclose(outs[0], outs[1], rtol=1e-3, atol=1e-3)
+
+
+class TestScheduleProperties:
+    @SET
+    @given(st.integers(1, 40), st.integers(1, 64),
+           st.floats(1.0, 500.0), st.floats(1.0, 500.0))
+    def test_schedule_always_valid_and_no_slower(self, layers, bits,
+                                                 t_read_ns, t_write_ns):
+        p = CrossStackParams(t_read=t_read_ns * 1e-9,
+                             t_write=t_write_ns * 1e-9)
+        d = pipe.deepnet_schedule(layers, bits, p)
+        d.validate()
+        s = pipe.serial_schedule(layers, bits, p)
+        assert d.total <= s.total + 1e-12
+        # steady-state bound: never better than hiding the shorter phase
+        bound = 1.0 - max(p.t_write, bits * p.t_read) / (
+            p.t_write + bits * p.t_read)
+        assert 1.0 - d.total / s.total <= bound + 1e-9
+
+
+class TestGLAProperties:
+    @SET
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8, 16]),
+           st.booleans())
+    def test_chunked_matches_naive(self, seed, chunk, use_u):
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 5)
+        B, S, H, dk, dv = 2, 24, 2, 4, 8
+        q = jax.random.normal(ks[0], (B, S, H, dk)) * 0.5
+        k = jax.random.normal(ks[1], (B, S, H, dk)) * 0.5
+        v = jax.random.normal(ks[2], (B, S, H, dv)) * 0.5
+        log_w = -jnp.exp(jax.random.normal(ks[3], (B, S, H, dk)))
+        u = (jax.random.normal(ks[4], (H, dk)) * 0.3) if use_u else None
+        y_ref, st_ref = naive_gla(q, k, v, log_w, u)
+        y, st_out = chunked_gla(q, k, v, log_w, u, chunk=chunk)
+        assert jnp.allclose(y, y_ref, atol=1e-4), "outputs diverge"
+        assert jnp.allclose(st_out, st_ref, atol=1e-4), "state diverges"
+
+    @SET
+    @given(st.integers(0, 2**31 - 1))
+    def test_state_passing_composes(self, seed):
+        """gla(x[:S1]) then gla(x[S1:], state0) == gla(x) — the contract
+        that makes chunked prefill + decode correct."""
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 4)
+        B, S, H, dk, dv = 1, 16, 2, 4, 4
+        q = jax.random.normal(ks[0], (B, S, H, dk)) * 0.5
+        k = jax.random.normal(ks[1], (B, S, H, dk)) * 0.5
+        v = jax.random.normal(ks[2], (B, S, H, dv)) * 0.5
+        log_w = -jnp.exp(jax.random.normal(ks[3], (B, S, H, dk)))
+        y_full, st_full = chunked_gla(q, k, v, log_w, None, chunk=4)
+        y1, st1 = chunked_gla(q[:, :8], k[:, :8], v[:, :8], log_w[:, :8],
+                              None, chunk=4)
+        y2, st2 = chunked_gla(q[:, 8:], k[:, 8:], v[:, 8:], log_w[:, 8:],
+                              None, chunk=4, state0=st1)
+        assert jnp.allclose(jnp.concatenate([y1, y2], 1), y_full, atol=1e-4)
+        assert jnp.allclose(st2, st_full, atol=1e-4)

@@ -1,0 +1,74 @@
+"""Serving runtime tests: generation loop + continuous-batching scheduler."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.serve.engine import (BatchScheduler, Request, greedy_generate,
+                                make_decode_step, make_prefill_step)
+
+
+def _model():
+    cfg = get_config("qwen3_4b", smoke=True)
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def test_greedy_generate_shapes_and_determinism():
+    cfg, m, params = _model()
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab - 1).astype(jnp.int32)
+    out1 = greedy_generate(m, params, {"tokens": prompts}, max_new=6)
+    out2 = greedy_generate(m, params, {"tokens": prompts}, max_new=6)
+    assert out1.shape == (2, 6)
+    assert jnp.array_equal(out1, out2)
+    assert int(out1.max()) < cfg.padded_vocab
+
+
+def test_prefill_then_decode_continues_greedy_path():
+    cfg, m, params = _model()
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                                 cfg.vocab - 1).astype(jnp.int32)
+    cache = m.init_cache(2, 32)
+    prefill = make_prefill_step(m)
+    decode = make_decode_step(m)
+    tok, cache = prefill(params, {"tokens": prompts}, cache)
+    toks = [tok]
+    for _ in range(3):
+        tok, cache = decode(params, tok, cache)
+        toks.append(tok)
+    gen = jnp.concatenate(toks, axis=1)
+    ref = greedy_generate(m, params, {"tokens": prompts}, max_new=4,
+                          max_len=32)
+    assert jnp.array_equal(gen, ref)
+
+
+def test_scheduler_completes_all_requests():
+    cfg, m, params = _model()
+    sched = BatchScheduler(m, params, n_slots=2, max_len=32)
+    for rid in range(4):
+        p = jax.random.randint(jax.random.PRNGKey(rid), (6,), 0,
+                               cfg.vocab - 1).astype(jnp.int32)
+        sched.submit(Request(rid=rid, prompt=p, max_new=5))
+    done, steps = [], 0
+    while len(done) < 4 and steps < 200:
+        done += sched.step()
+        steps += 1
+    assert len(done) == 4
+    assert all(len(r.out) >= 5 for r in done)
+
+
+def test_scheduler_matches_unbatched_decode():
+    """A request served through slot admission must produce the same
+    tokens as a dedicated batch-of-1 generation."""
+    cfg, m, params = _model()
+    p = jax.random.randint(jax.random.PRNGKey(9), (6,), 0,
+                           cfg.vocab - 1).astype(jnp.int32)
+    ref = greedy_generate(m, params, {"tokens": p[None]}, max_new=5,
+                          max_len=32)[0]
+    sched = BatchScheduler(m, params, n_slots=2, max_len=32)
+    sched.submit(Request(rid=0, prompt=p, max_new=5))
+    done = []
+    while not done:
+        done += sched.step()
+    assert done[0].out[:5] == [int(t) for t in ref[:5]]
