@@ -1,17 +1,26 @@
 """Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
 
-One function per paper table/figure (see paper_benches.py), printed as
-``name,us_per_call,derived`` CSV rows, followed by the roofline summary if
-dry-run artifacts exist (benchmarks/roofline.py builds the full table).
+One function per paper table/figure (see paper_benches.py) plus the
+weight-residency benches (executor_bench.py), printed as
+``name,us_per_call,derived`` CSV rows and written to a ``BENCH_*.json``
+artifact, followed by the roofline summary if dry-run artifacts exist
+(benchmarks/roofline.py builds the full table).
+
+``--quick`` runs the smallest configs (the CI benchmark-smoke lane);
+``--json PATH`` overrides the artifact path.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)   # so ``python benchmarks/run.py`` also works
 
+from benchmarks import executor_bench as xb  # noqa: E402
 from benchmarks import paper_benches as pb  # noqa: E402
 
 
@@ -25,14 +34,37 @@ BENCHES = [
     ("engine_crossbar_mac", pb.bench_crossbar_mac),
 ]
 
+# weight-residency benches take a ``quick`` kwarg (CI smoke lane)
+RESIDENCY_BENCHES = [
+    ("executor_program_once", xb.bench_program_once),
+    ("executor_reference_vs_kernel", xb.bench_reference_vs_kernel),
+    ("executor_decode_resident", xb.bench_executor_decode),
+]
 
-def main() -> None:
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smallest configs; residency benches only")
+    ap.add_argument("--json", default="BENCH_crossstack.json",
+                    help="write all results to this JSON artifact")
+    args = ap.parse_args(argv)
+
+    results = {}
+    benches = ([(n, lambda f=f: f(quick=True)) for n, f in RESIDENCY_BENCHES]
+               if args.quick else
+               BENCHES + [(n, f) for n, f in RESIDENCY_BENCHES])
     print("name,us_per_call,derived")
-    for name, fn in BENCHES:
+    for name, fn in benches:
         res = fn()
+        results[name] = dict(res)
         us = res.pop("us_per_call", 0.0)
         derived = json.dumps(res, default=float)
         print(f"{name},{us:.1f},{derived}")
+
+    with open(args.json, "w") as f:
+        json.dump(results, f, indent=2, default=float)
+    print(f"# wrote {args.json}")
 
     # roofline summary (reads experiments/dryrun/*.json if present)
     try:

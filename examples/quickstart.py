@@ -32,6 +32,23 @@ for mode in ("expansion", "deepnet"):
         print(f"mode={mode:9s} w_bits={bits}  rel err={err:.4f}  "
               f"devices={pw.n_devices}")
 
+print("\n=== weight residency (program once, read forever) ===")
+# The deployment path: CrossbarExecutor programs a params tree onto
+# resident tiles once; every later call is a read-only bit-serial MAC.
+from repro.core.executor import CrossbarExecutor  # noqa: E402
+
+ex = CrossbarExecutor(eng.EngineConfig(tile_rows=64, tile_cols=64,
+                                       mode="deepnet"))
+ex.program_params({"head": W})
+with ex.activate():
+    from repro.core.executor import crossbar_linear
+    y = crossbar_linear(x, W, "head")
+print(f"resident grids={ex.n_resident}  devices={ex.n_devices}  "
+      f"programmed={ex.stats['programmed']}  "
+      f"rel err={float(jnp.abs(y - ref).max() / jnp.abs(ref).max()):.4f}")
+print("(models route every linear this way with backend='crossbar'; "
+      "see launch/serve.py --backend crossbar)")
+
 print("\ndeep-net pipeline (paper §V): read of layer l overlaps write of "
       "layer l+1")
 for b in (1, 4, 10, 16):

@@ -133,6 +133,58 @@ def matmul(x: jax.Array, pw: ProgrammedLinear, cfg: EngineConfig
 
 def matmul_reference(x: jax.Array, pw: ProgrammedLinear, cfg: EngineConfig
                      ) -> jax.Array:
+    """Scan-based reference: one (pulse, slice) step at a time, ADC fused.
+
+    The einsum formulation (kept as ``_matmul_reference_einsum``) holds the
+    full pre-ADC accumulator of shape (in_bits, S, B, T, N) live at once;
+    scanning over the in_bits * S (pulse, slice) pairs and applying the ADC
+    inside each step bounds peak activation memory at O(B * T * N) — the
+    hardware reads one pulse against one cell plane per beat anyway, so the
+    scan is also the faithful schedule.
+    """
+    q = cfg.quant
+    lead = x.shape[:-1]
+    xb = x.reshape(-1, x.shape[-1])                     # (B, K)
+    x_int, x_scale = quant.quantize_inputs(xb, q)
+    s, t, r, n_pad = pw.pos.shape
+    x_int = _pad_to(x_int, t * r, axis=-1).reshape(-1, t, r)
+    bits = quant.to_bit_serial(x_int, q)                # (b, B, T, R)
+    bitw = quant.bit_weights(q)                         # (b,)
+    slcw = quant.slice_weights(q)                       # (S,)
+
+    pos = pw.pos.astype(jnp.float32)
+    neg = pw.neg.astype(jnp.float32)
+    b_in = bits.shape[0]
+    bsz = x_int.shape[0]
+
+    def step(y_acc, idx):
+        a, sl = idx // s, idx % s
+        xa = jax.lax.dynamic_index_in_dim(bits, a, 0, keepdims=False)
+        p_s = jax.lax.dynamic_index_in_dim(pos, sl, 0, keepdims=False)
+        n_s = jax.lax.dynamic_index_in_dim(neg, sl, 0, keepdims=False)
+        # analog column sums of ONE pulse against ONE cell plane: (B, T, N)
+        acc_p = jnp.einsum("btr,trn->btn", xa, p_s)
+        acc_n = jnp.einsum("btr,trn->btn", xa, n_s)
+        if cfg.mode == "expansion" and t % 2 == 0 and t >= 2:
+            # adjacent row-tiles stacked on the two planes: analog sum first
+            acc_p = acc_p.reshape(bsz, t // 2, 2, n_pad).sum(axis=2)
+            acc_n = acc_n.reshape(bsz, t // 2, 2, n_pad).sum(axis=2)
+        d = _adc_codes(acc_p, cfg) - _adc_codes(acc_n, cfg)
+        return y_acc + bitw[a] * slcw[sl] * d.sum(axis=1), None
+
+    y_int, _ = jax.lax.scan(step, jnp.zeros((bsz, n_pad), jnp.float32),
+                            jnp.arange(b_in * s))
+    y = y_int * x_scale * pw.w_scale[..., :n_pad]
+    return y[:, : pw.n].reshape(*lead, pw.n)
+
+
+def _matmul_reference_einsum(x: jax.Array, pw: ProgrammedLinear,
+                             cfg: EngineConfig) -> jax.Array:
+    """Original all-at-once einsum formulation.
+
+    O(in_bits * S * B * T * N) peak memory; retained as the oracle the
+    scan-based reference must match bit for bit (tests/test_executor.py).
+    """
     q = cfg.quant
     lead = x.shape[:-1]
     xb = x.reshape(-1, x.shape[-1])                     # (B, K)

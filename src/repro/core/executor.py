@@ -1,0 +1,254 @@
+"""Weight-resident crossbar execution: program at load, read at inference.
+
+The paper's deep-net operating point keeps weights *resident* in the
+TiO2/TiO2-x stack — programming happens once when a network is deployed,
+and every subsequent inference is a read-only bit-serial MAC against the
+already-programmed conductances.  ``engine.linear`` (program-and-run) is
+the right op for QAT and fidelity sweeps, but re-quantizing and re-slicing
+every weight matrix on every forward call is exactly what a memristor
+engine exists to avoid.
+
+``CrossbarExecutor`` is the deployment-side half:
+
+  * :meth:`program_params` walks a model's params pytree once, classifies
+    every eligible linear weight (attention projections, dense MLP mats,
+    the LM head), and programs each onto cached :class:`ProgrammedLinear`
+    tile grids — layer-stacked leaves are unstacked so each layer owns its
+    physical tiles.  Re-walking the same tree is a cache hit, never a
+    re-program (``stats`` records both).
+  * :func:`crossbar_linear` is the drop-in the model zoo routes through:
+    inside an :meth:`activate` region it executes ``x @ W`` on the resident
+    tiles via ``engine.matmul``; outside (or for weights the executor does
+    not hold) it falls back to the caller's digital formulation.
+
+Weight addressing is by *name*: ``models/transformer.py`` pushes name
+scopes (``blocks.3.attn``) around each sub-module so the same pure layer
+functions resolve their crossbar tiles under jit, where array identity is
+meaningless (params are tracers).  The crossbar backend therefore runs the
+unrolled layer loop (``scan_layers=False`` path) — layer indices must be
+Python ints to name tiles.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.core.engine import EngineConfig, ProgrammedLinear
+
+# weight-leaf classification: final path key -> contracted input axes,
+# in the context of its parent module key
+_ATTN_KEYS = {"wq": 1, "wk": 1, "wv": 1, "wo": 2}
+_MLP_KEYS = {"wi": 1, "wg": 1, "wo": 1}
+# top-level param stacks whose leading axis is the layer index
+_STACKED_ROOTS = ("blocks", "enc_blocks")
+
+
+def _path_parts(path) -> List[str]:
+    out = []
+    for k in path:
+        out.append(str(getattr(k, "key", getattr(k, "idx",
+                                                 getattr(k, "name", k)))))
+    return out
+
+
+def _classify(parts: List[str]) -> Optional[int]:
+    """Return contracted-input-axis count for an eligible leaf, else None."""
+    if parts == ["head"]:
+        return 1
+    if len(parts) >= 2:
+        mod, leaf = parts[-2], parts[-1]
+        if mod == "xattn" and leaf in ("wk", "wv"):
+            # cross-attention K/V come from the encoder output via the
+            # digital _cross_kv path (model.py); programming them would
+            # waste tiles that are never read
+            return None
+        if mod in ("attn", "xattn") and leaf in _ATTN_KEYS:
+            return _ATTN_KEYS[leaf]
+        if mod == "mlp" and leaf in _MLP_KEYS:
+            return _MLP_KEYS[leaf]
+    return None
+
+
+class CrossbarExecutor:
+    """Programs a model's linear weights onto crossbar tiles exactly once
+    and serves all subsequent ``x @ W`` reads from the resident tiles."""
+
+    def __init__(self, cfg: EngineConfig = EngineConfig(mode="deepnet")):
+        self.cfg = cfg
+        self._cache: Dict[str, ProgrammedLinear] = {}
+        self._n_in: Dict[str, int] = {}
+        # the leaf arrays the tiles were programmed from: resident
+        # conductances are physical state, so serving a DIFFERENT tree
+        # through them must be an error, not silent reuse.  Strong refs —
+        # identity comparison stays sound (no id() reuse after GC).
+        self._programmed_leaves: Optional[Tuple[Any, ...]] = None
+        self.stats = {"programmed": 0, "cache_hits": 0, "program_walks": 0}
+
+    # -- programming (the write path; once per deployment) -----------------
+
+    def program_params(self, params: Any) -> int:
+        """Program every eligible linear weight in ``params``; idempotent.
+
+        Returns the number of weights *newly* programmed this walk; weights
+        already resident count as ``stats['cache_hits']`` instead.
+        """
+        leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+        if any(isinstance(w, jax.core.Tracer) for _, w in leaves):
+            raise TypeError(
+                "CrossbarExecutor.program_params needs concrete arrays; "
+                "program at load time, before entering jit")
+        tree = tuple(w for _, w in leaves)
+        if self._programmed_leaves is None:
+            self._programmed_leaves = tree
+        elif not self._same_tree(tree):
+            raise RuntimeError(
+                "crossbar tiles are already programmed from a different "
+                "params tree; resident weights are physical state — build "
+                "a fresh model/executor to deploy new params")
+        self.stats["program_walks"] += 1
+        new = 0
+        for path, w in leaves:
+            parts = _path_parts(path)
+            n_in = _classify(parts)
+            if n_in is None:
+                continue
+            if parts[0] in _STACKED_ROOTS:
+                for layer in range(w.shape[0]):
+                    name = ".".join([parts[0], str(layer)] + parts[1:])
+                    new += self._program_one(name, w[layer], n_in)
+            else:
+                new += self._program_one(name := ".".join(parts), w, n_in)
+        return new
+
+    def _program_one(self, name: str, w: jax.Array, n_in: int) -> int:
+        if name in self._cache:
+            self.stats["cache_hits"] += 1
+            return 0
+        k = math.prod(w.shape[:n_in])
+        w2d = jnp.asarray(w, jnp.float32).reshape(k, -1)
+        self._cache[name] = engine.program(w2d, self.cfg)
+        self._n_in[name] = n_in
+        self.stats["programmed"] += 1
+        return 1
+
+    def _same_tree(self, leaves: Tuple[Any, ...]) -> bool:
+        prog = self._programmed_leaves
+        return (prog is not None and len(prog) == len(leaves)
+                and all(a is b for a, b in zip(prog, leaves)))
+
+    def ensure_programmed(self, params: Any) -> None:
+        """Program on the first eager call; afterwards verify the caller is
+        serving the SAME params tree the tiles were programmed from.
+
+        Under jit the leaves are tracers and identity CANNOT be verified —
+        a caller who programs tree A eagerly and then jit-calls with tree B
+        gets tree A's tiles.  The supported flow (BatchScheduler / the
+        model's eager entry points) always passes through an eager call,
+        where the check is sound.
+        """
+        leaves = jax.tree_util.tree_leaves(params)
+        if any(isinstance(w, jax.core.Tracer) for w in leaves):
+            if not self._cache:
+                raise RuntimeError(
+                    "crossbar weights are not programmed and params are "
+                    "tracers; call model.executor.program_params(params) "
+                    "eagerly before jitting the serving step")
+            return  # tracers: identity unverifiable here (see docstring)
+        if self._same_tree(tuple(leaves)):
+            return
+        # unseen tree: program it (first call), or raise (different tree /
+        # a tree extending a manually-programmed subset) via program_params
+        self.program_params(params)
+
+    # -- read path ----------------------------------------------------------
+
+    def has(self, name: str) -> bool:
+        return name in self._cache
+
+    def linear(self, x: jax.Array, w: jax.Array, name: str) -> jax.Array:
+        """Resident-tile execution of ``x @ W`` for the named weight.
+
+        ``w`` is only consulted for its (static) shape — the arithmetic
+        reads the programmed tiles, which is the point.
+        """
+        pw = self._cache[name]
+        n_in = self._n_in[name]
+        lead = x.shape[:-n_in]
+        k = math.prod(x.shape[-n_in:])
+        if k != pw.k:
+            raise ValueError(f"{name}: input dim {k} != programmed {pw.k}")
+        y = engine.matmul(x.reshape(*lead, k).astype(jnp.float32), pw,
+                          self.cfg)
+        return y.reshape(*lead, *w.shape[n_in:]).astype(x.dtype)
+
+    # -- bookkeeping ---------------------------------------------------------
+
+    @property
+    def n_resident(self) -> int:
+        return len(self._cache)
+
+    @property
+    def n_devices(self) -> int:
+        """Total programmed memristors across all resident tile grids."""
+        return sum(pw.n_devices for pw in self._cache.values())
+
+    @contextlib.contextmanager
+    def activate(self):
+        global _ACTIVE
+        prev, _ACTIVE = _ACTIVE, self
+        try:
+            yield self
+        finally:
+            _ACTIVE = prev
+
+
+# -- routing: active executor + name scopes (trace-time Python state) -------
+
+_ACTIVE: Optional[CrossbarExecutor] = None
+_SCOPE: List[str] = []
+
+
+def active() -> Optional[CrossbarExecutor]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def scope(name: Any):
+    """Push a name-scope segment (layer index, module name) for routing."""
+    _SCOPE.append(str(name))
+    try:
+        yield
+    finally:
+        _SCOPE.pop()
+
+
+def scoped(name: str) -> str:
+    return ".".join(_SCOPE + [name]) if _SCOPE else name
+
+
+def crossbar_linear(x: jax.Array, w: jax.Array, name: str,
+                    digital=None) -> jax.Array:
+    """Drop-in linear: resident-crossbar read when an executor is active
+    and holds the scoped weight, else the caller's digital formulation.
+
+    ``digital`` is a thunk so the digital path keeps its exact dtype /
+    sharding-constraint behavior (bf16 einsums, TP matmul variants) with
+    zero cost on the crossbar path.
+    """
+    ex = _ACTIVE
+    if ex is not None:
+        full = scoped(name)
+        if ex.has(full):
+            return ex.linear(x, w, full)
+    if digital is None:
+        # no axes-guessing fallback: only the executor knows how many input
+        # axes a named weight contracts (attention wo contracts two)
+        raise ValueError(
+            f"no resident tiles for {scoped(name)!r} and no digital "
+            f"fallback provided")
+    return digital()

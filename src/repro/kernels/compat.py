@@ -1,0 +1,20 @@
+"""JAX version compatibility for Pallas TPU compiler params.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in
+newer JAX releases (and the old name later removed).  All kernels build
+their compiler params through :func:`tpu_compiler_params` so either JAX
+works unchanged.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+if hasattr(pltpu, "CompilerParams"):
+    TPUCompilerParams = pltpu.CompilerParams
+else:
+    TPUCompilerParams = pltpu.TPUCompilerParams
+
+
+def tpu_compiler_params(**kwargs):
+    """Construct TPU compiler params under whichever name this JAX has."""
+    return TPUCompilerParams(**kwargs)

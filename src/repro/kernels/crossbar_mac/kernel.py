@@ -31,7 +31,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import tpu_compiler_params
 
 
 def _adc(acc, adc_bits: int, full_scale: float):
@@ -102,7 +103,7 @@ def crossbar_mac(x_int, pos, neg, *, in_bits: int, adc_bits: int,
         ],
         out_specs=pl.BlockSpec((block_b, block_n), lambda i, j, t: (i, j)),
         out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x_int, pos, neg)

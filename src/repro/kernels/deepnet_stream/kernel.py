@@ -25,7 +25,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import tpu_compiler_params
 
 
 def _adc(acc, adc_bits: int, full_scale: float):
@@ -101,7 +102,7 @@ def deepnet_stream(x_int, w, w_scale, *, w_bits: int, in_bits: int,
         ],
         out_specs=pl.BlockSpec((block_b, block_n), lambda i, j, t: (i, j)),
         out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x_int, w, w_scale)

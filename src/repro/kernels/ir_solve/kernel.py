@@ -17,7 +17,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import tpu_compiler_params
 
 
 def _kernel(g_ref, vin_ref, vrow_ref, vcol_ref, orow_ref, ocol_ref, *,
@@ -67,6 +68,6 @@ def jacobi_sweeps(g, v_in, v_row, v_col, *, g_w: float, omega: float = 1.0,
                   pl.BlockSpec((n, m), lambda: (0, 0))],
         out_specs=(pl.BlockSpec((n, m), lambda: (0, 0)),
                    pl.BlockSpec((n, m), lambda: (0, 0))),
-        compiler_params=pltpu.CompilerParams(),
+        compiler_params=tpu_compiler_params(),
         interpret=interpret,
     )(g, v_in, v_row, v_col)

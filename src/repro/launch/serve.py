@@ -3,10 +3,15 @@
 Continuous-batching decode over the BatchScheduler with synthetic prompts;
 on a fleet the same file serves the full config on the production mesh
 (params would come from checkpoint/manager.py instead of random init).
+
+``--backend crossbar`` serves every linear layer from weight-resident
+crossbar tiles: weights are programmed once at scheduler construction and
+every decode step is a read-only bit-serial MAC (core/executor.py).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -21,6 +26,9 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--backend", default="digital",
+                    choices=["digital", "crossbar"],
+                    help="crossbar = weight-resident tiles, program-once")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -32,11 +40,18 @@ def main(argv=None):
     if cfg.family in ("encdec", "vlm", "rwkv6", "zamba2"):
         raise SystemExit("scheduler demo targets decoder LMs; "
                          "see examples/serve_batch.py for other families")
+    cfg = dataclasses.replace(cfg, backend=args.backend)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
     sched = BatchScheduler(model, params, n_slots=args.slots,
                            max_len=args.max_len)
+    if model.executor is not None:
+        ex = model.executor
+        print(f"crossbar backend: {ex.n_resident} resident weight grids, "
+              f"{ex.n_devices} programmed devices "
+              f"(programmed={ex.stats['programmed']}, "
+              f"cache_hits={ex.stats['cache_hits']})")
     key = jax.random.PRNGKey(1)
     for rid in range(args.requests):
         key, k = jax.random.split(key)

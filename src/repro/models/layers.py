@@ -14,6 +14,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.executor import crossbar_linear
 from repro.distributed.sharding import logical_constraint as lc
 
 Params = Dict[str, Any]
@@ -157,10 +158,17 @@ def attn_init(key, cfg: AttnConfig):
     return p, s
 
 
+def _qkv_proj(x, w, name):
+    """q/k/v projection, routable onto resident crossbar tiles."""
+    return crossbar_linear(
+        x, w, name,
+        digital=lambda: jnp.einsum("bsd,dhk->bshk", x, w.astype(x.dtype)))
+
+
 def _project_qkv(p, cfg: AttnConfig, x, positions):
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
-    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
-    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    q = _qkv_proj(x, p["wq"], "wq")
+    k = _qkv_proj(x, p["wk"], "wk")
+    v = _qkv_proj(x, p["wv"], "wv")
     if cfg.qk_norm:
         q = rmsnorm(q, p["q_norm"])
         k = rmsnorm(k, p["k_norm"])
@@ -246,7 +254,7 @@ def attention(p, cfg: AttnConfig, x, positions, cache=None,
     """
     b, sq, _ = x.shape
     if cross_kv is not None:
-        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+        q = _qkv_proj(x, p["wq"], "wq")
         if cfg.qk_norm:
             q = rmsnorm(q, p["q_norm"])
         k, v = cross_kv
@@ -269,8 +277,11 @@ def attention(p, cfg: AttnConfig, x, positions, cache=None,
         new_cache = {"k": ck, "v": cv, "len": new_len}
     # explicit bf16 dot output: the TP partial-sum all-reduce then moves
     # bf16, not the f32 accumulator JAX requests by default (§Perf H1)
-    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype),
-                   preferred_element_type=x.dtype)
+    y = crossbar_linear(
+        out, p["wo"], "wo",
+        digital=lambda: jnp.einsum("bshk,hkd->bsd", out,
+                                   p["wo"].astype(x.dtype),
+                                   preferred_element_type=x.dtype))
     return lc(y, ("batch", "seq", "act_embed")), new_cache
 
 
@@ -305,9 +316,12 @@ def mlp_init(key, d_model: int, d_ff: int, act: str):
 
 
 def mlp(p, x, act: str):
-    h = x @ p["wi"].astype(x.dtype)
+    h = crossbar_linear(x, p["wi"], "wi",
+                        digital=lambda: x @ p["wi"].astype(x.dtype))
     if act == "swiglu":
-        h = jax.nn.silu(x @ p["wg"].astype(x.dtype)) * h
+        g = crossbar_linear(x, p["wg"], "wg",
+                            digital=lambda: x @ p["wg"].astype(x.dtype))
+        h = jax.nn.silu(g) * h
     elif act == "relu2":                  # nemotron squared-ReLU
         h = jnp.square(jax.nn.relu(h))
     elif act == "gelu":
@@ -315,11 +329,16 @@ def mlp(p, x, act: str):
     else:
         raise ValueError(act)
     h = lc(h, ("batch", None, "act_mlp"))
-    from repro.distributed.sharding import tp_bf16_matmul
-    y = tp_bf16_matmul(h, p["wo"].astype(x.dtype))  # opt-in (§Perf)
-    if y is None:
-        y = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype),
-                       preferred_element_type=x.dtype)
+
+    def _wo_digital():
+        from repro.distributed.sharding import tp_bf16_matmul
+        y = tp_bf16_matmul(h, p["wo"].astype(x.dtype))  # opt-in (§Perf)
+        if y is None:
+            y = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype),
+                           preferred_element_type=x.dtype)
+        return y
+
+    y = crossbar_linear(h, p["wo"], "wo", digital=_wo_digital)
     return lc(y, ("batch", "seq", "act_embed"))
 
 

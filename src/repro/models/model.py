@@ -16,6 +16,9 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import executor as xbar
+from repro.core.engine import EngineConfig
+from repro.core.executor import CrossbarExecutor
 from repro.distributed.sharding import logical_constraint as lc
 from repro.models import layers as L
 from repro.models import rwkv as R
@@ -60,6 +63,8 @@ class ModelConfig:
     # fp8 halves decode's dominant memory term — the CrossStack low-bit-cell
     # argument applied to the cache (§Perf)
     tie_embeddings: bool = False
+    backend: str = "digital"       # "digital" | "crossbar" (weight-resident)
+    xbar: EngineConfig = EngineConfig(mode="deepnet")  # crossbar-backend cfg
 
     @property
     def padded_vocab(self) -> int:
@@ -121,6 +126,7 @@ class Model:
     decode_step: Any
     init_cache: Any
     cache_specs: Any
+    executor: Optional[CrossbarExecutor] = None  # crossbar backend only
 
 
 # ---------------------------------------------------------------------------
@@ -133,6 +139,11 @@ def _build_transformer(cfg: ModelConfig) -> Model:
         bc, cross_attn=False,
         attn=dataclasses.replace(bc.attn, causal=False))
     pv = cfg.padded_vocab
+    executor = (CrossbarExecutor(cfg.xbar) if cfg.backend == "crossbar"
+                else None)
+    # crossbar tiles are addressed by layer NAME, so the layer loop must be
+    # unrolled (Python ints, not a scanned carry index)
+    scan_layers = cfg.scan_layers and executor is None
 
     def init(key):
         ks = jax.random.split(key, 4)
@@ -169,16 +180,19 @@ def _build_transformer(cfg: ModelConfig) -> Model:
         return jnp.broadcast_to(pos, (batch["tokens"].shape[0], sq))
 
     def _trunk(p, x, positions, caches=None, cross_kv=None, cross_len=None):
-        return T.stack_apply(p["blocks"], bc, x, positions, caches=caches,
-                             cross_kv=cross_kv, cross_len=cross_len,
-                             remat=cfg.remat, scan=cfg.scan_layers)
+        with xbar.scope("blocks"):
+            return T.stack_apply(p["blocks"], bc, x, positions,
+                                 caches=caches, cross_kv=cross_kv,
+                                 cross_len=cross_len, remat=cfg.remat,
+                                 scan=scan_layers)
 
     def _encode(p, batch):
         enc = batch["enc_emb"].astype(cfg.dtype)
         pos = jnp.broadcast_to(jnp.arange(enc.shape[1])[None],
                                enc.shape[:2])
-        h, _, _ = T.stack_apply(p["enc_blocks"], enc_bc, enc, pos,
-                                remat=cfg.remat, scan=cfg.scan_layers)
+        with xbar.scope("enc_blocks"):
+            h, _, _ = T.stack_apply(p["enc_blocks"], enc_bc, enc, pos,
+                                    remat=cfg.remat, scan=scan_layers)
         return L.rmsnorm(h, p["enc_ln_f"])
 
     def _cross_kv(p, enc_out):
@@ -195,9 +209,12 @@ def _build_transformer(cfg: ModelConfig) -> Model:
 
     def _logits(p, x):
         x = lc(x, ("batch", "seq_act", "act_embed"))  # SP gather point
-        head = (p["embed"]["tok"].T if cfg.tie_embeddings
-                else p["head"])
-        return T.unembed(p["embed"], x, head=head)
+        if not cfg.tie_embeddings:
+            logits = xbar.crossbar_linear(
+                x, p["head"], "head",
+                digital=lambda: T.unembed(p["embed"], x, head=p["head"]))
+            return lc(logits, ("batch", None, "vocab"))
+        return T.unembed(p["embed"], x)
 
     def _embed_inputs(p, batch):
         x = T.embed(p["embed"], batch["tokens"]).astype(cfg.dtype)
@@ -288,8 +305,27 @@ def _build_transformer(cfg: ModelConfig) -> Model:
         logits = _logits(params, h)
         return logits, dict(cache, layers=new_layers)
 
-    return Model(cfg, init, param_specs, loss_fn, prefill, decode_step,
-                 init_cache, cache_specs)
+    def _on_crossbar(fn):
+        """Inference entry points read the resident tiles.
+
+        Programming happens on the first *eager* call (or explicitly via
+        ``model.executor.program_params``); under jit the tiles must
+        already be resident.  The training path (``loss_fn``) stays
+        digital — program-at-load is a deployment-side contract.
+        """
+        if executor is None:
+            return fn
+
+        def wrapped(params, *args, **kwargs):
+            executor.ensure_programmed(params)
+            with executor.activate():
+                return fn(params, *args, **kwargs)
+
+        return wrapped
+
+    return Model(cfg, init, param_specs, loss_fn, _on_crossbar(prefill),
+                 _on_crossbar(decode_step), init_cache, cache_specs,
+                 executor=executor)
 
 
 # ---------------------------------------------------------------------------
@@ -551,8 +587,14 @@ def _build_zamba(cfg: ModelConfig) -> Model:
 
 
 def build_model(cfg: ModelConfig) -> Model:
+    if cfg.backend not in ("digital", "crossbar"):
+        raise ValueError(f"unknown backend {cfg.backend!r}")
     if cfg.family in ("dense", "moe", "vlm", "encdec"):
         return _build_transformer(cfg)
+    if cfg.backend == "crossbar":
+        raise ValueError(
+            f"backend='crossbar' supports transformer families only, "
+            f"not {cfg.family!r}")
     if cfg.family == "rwkv6":
         return _build_rwkv(cfg)
     if cfg.family == "zamba2":

@@ -11,6 +11,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import executor as xbar
 from repro.distributed.sharding import logical_constraint as lc
 from repro.models import layers as L
 from repro.models.layers import AttnConfig, MoEConfig
@@ -105,14 +106,16 @@ def block(p, cfg: BlockConfig, x, positions, cache=None, cross_kv=None,
     def gather_sp(h):
         return lc(h, ("batch", "seq_act", "act_embed"))
 
-    h, new_cache = L.attention(p["attn"], cfg.attn,
-                               gather_sp(_norm(cfg, x, p["ln1"])),
-                               positions, cache=cache)
+    with xbar.scope("attn"):
+        h, new_cache = L.attention(p["attn"], cfg.attn,
+                                   gather_sp(_norm(cfg, x, p["ln1"])),
+                                   positions, cache=cache)
     x = x + lc(h, ("batch", "seq", "act_embed"))
     if cfg.cross_attn:
-        h, _ = L.attention(p["xattn"], cfg.attn,
-                           gather_sp(_norm(cfg, x, p["ln_x"])),
-                           None, cross_kv=cross_kv, kv_len=cross_len)
+        with xbar.scope("xattn"):
+            h, _ = L.attention(p["xattn"], cfg.attn,
+                               gather_sp(_norm(cfg, x, p["ln_x"])),
+                               None, cross_kv=cross_kv, kv_len=cross_len)
         x = x + lc(h, ("batch", "seq", "act_embed"))
     aux = jnp.zeros((), jnp.float32)
     if cfg.moe is not None:
@@ -120,7 +123,8 @@ def block(p, cfg: BlockConfig, x, positions, cache=None, cross_kv=None,
                                cfg.moe)
         aux = L.moe_aux_loss(gates)
     else:
-        h = L.mlp(p["mlp"], gather_sp(_norm(cfg, x, p["ln2"])), cfg.act)
+        with xbar.scope("mlp"):
+            h = L.mlp(p["mlp"], gather_sp(_norm(cfg, x, p["ln2"])), cfg.act)
     return x + lc(h, ("batch", "seq", "act_embed")), new_cache, aux
 
 
@@ -181,7 +185,8 @@ def stack_apply(stacked_p, cfg: BlockConfig, x, positions, caches=None,
                        if has_cache else None)
             xkv_l = (jax.tree.map(lambda a: a[l], cross_kv)
                      if cross_kv is not None else None)
-            x, new_cache, a = one_layer(p_l, x, cache_l, xkv_l)
+            with xbar.scope(l):   # names this layer's resident tiles
+                x, new_cache, a = one_layer(p_l, x, cache_l, xkv_l)
             aux = aux + a
             if has_cache:
                 new_caches = jax.tree.map(

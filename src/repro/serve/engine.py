@@ -90,6 +90,13 @@ class BatchScheduler:
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.cache = model.init_cache(n_slots, max_len)
         self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        executor = getattr(model, "executor", None)
+        if executor is not None:
+            # crossbar backend: program weights onto the resident tiles
+            # ONCE at scheduler construction — the jitted decode step below
+            # traces against already-programmed tiles (program-at-load,
+            # read-at-inference)
+            executor.ensure_programmed(params)
         self._decode = jax.jit(make_decode_step(model), donate_argnums=(2,))
 
     def submit(self, req: Request):
