@@ -1,0 +1,67 @@
+"""Provenance stamping for BENCH_*.json artifacts.
+
+Every artifact carries a ``_meta`` block (git SHA, jax version, UTC
+timestamp, backend) and appends a one-line summary to
+``benchmarks/trajectory.json`` so bench numbers are comparable across
+PRs — the trajectory starts as an empty ``[]`` and grows one entry per
+local/CI run.
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import subprocess
+from typing import Any, Dict
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TRAJECTORY = os.path.join(_ROOT, "benchmarks", "trajectory.json")
+
+
+def bench_meta(**extra: Any) -> Dict[str, Any]:
+    """git SHA + jax version + UTC timestamp (+ caller extras)."""
+    try:
+        sha = subprocess.check_output(
+            ["git", "rev-parse", "HEAD"], cwd=_ROOT,
+            stderr=subprocess.DEVNULL).decode().strip()
+    except Exception:  # noqa: BLE001 — not a git checkout / no git binary
+        sha = "unknown"
+    import jax
+    meta = {
+        "git_sha": sha,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+    meta.update(extra)
+    return meta
+
+
+def write_stamped(results: Dict[str, Any], path: str,
+                  **meta_extra: Any) -> Dict[str, Any]:
+    """Write ``results`` + ``_meta`` to ``path``; returns the meta block."""
+    meta = bench_meta(**meta_extra)
+    out = dict(results)
+    out["_meta"] = meta
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, default=float)
+    return meta
+
+
+def append_trajectory(meta: Dict[str, Any],
+                      results: Dict[str, Any]) -> None:
+    """Append {meta, us_per_call summary} to benchmarks/trajectory.json."""
+    try:
+        with open(TRAJECTORY) as f:
+            traj = json.load(f)
+        if not isinstance(traj, list):
+            traj = []
+    except (OSError, ValueError):
+        traj = []
+    summary = {name: res.get("us_per_call")
+               for name, res in results.items()
+               if isinstance(res, dict) and not name.startswith("_")}
+    traj.append({"meta": meta, "us_per_call": summary})
+    with open(TRAJECTORY, "w") as f:
+        json.dump(traj, f, indent=2, default=float)

@@ -21,7 +21,9 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 sys.path.insert(0, _ROOT)   # so ``python benchmarks/run.py`` also works
 
 from benchmarks import executor_bench as xb  # noqa: E402
+from benchmarks import hotswap_bench as hb  # noqa: E402
 from benchmarks import paper_benches as pb  # noqa: E402
+from benchmarks.meta import append_trajectory, write_stamped  # noqa: E402
 
 
 BENCHES = [
@@ -39,6 +41,7 @@ RESIDENCY_BENCHES = [
     ("executor_program_once", xb.bench_program_once),
     ("executor_reference_vs_kernel", xb.bench_reference_vs_kernel),
     ("executor_decode_resident", xb.bench_executor_decode),
+    ("hotswap_overlap", hb.bench_hotswap),
 ]
 
 
@@ -51,7 +54,12 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     results = {}
-    benches = ([(n, lambda f=f: f(quick=True)) for n, f in RESIDENCY_BENCHES]
+    # --quick is CI's "Benchmark smoke" step, which is followed by a
+    # dedicated hotswap_bench.py run — skip hotswap there to avoid paying
+    # the same swap loop twice per CI run
+    quick_benches = [(n, f) for n, f in RESIDENCY_BENCHES
+                     if n != "hotswap_overlap"]
+    benches = ([(n, lambda f=f: f(quick=True)) for n, f in quick_benches]
                if args.quick else
                BENCHES + [(n, f) for n, f in RESIDENCY_BENCHES])
     print("name,us_per_call,derived")
@@ -62,9 +70,13 @@ def main(argv=None) -> None:
         derived = json.dumps(res, default=float)
         print(f"{name},{us:.1f},{derived}")
 
-    with open(args.json, "w") as f:
-        json.dump(results, f, indent=2, default=float)
-    print(f"# wrote {args.json}")
+    # provenance stamp (git SHA, jax version, timestamp) + trajectory
+    # append — BENCH_*.json artifacts are comparable across PRs
+    meta = write_stamped(results, args.json,
+                         lane="quick" if args.quick else "full")
+    append_trajectory(meta, results)
+    print(f"# wrote {args.json} (sha={meta['git_sha'][:12]} "
+          f"jax={meta['jax_version']} at {meta['timestamp_utc']})")
 
     # roofline summary (reads experiments/dryrun/*.json if present)
     try:

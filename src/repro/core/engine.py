@@ -44,6 +44,9 @@ class EngineConfig:
     params: CrossStackParams = PAPER
     use_kernel: bool = False           # route MAC through the Pallas kernel
     interpret: bool = True             # Pallas interpret mode (CPU container)
+    swap_leakage: bool = False         # perturb reads with write-plane
+    # leakage while a hot-swap is in flight (fidelity studies; breaks
+    # bit-exactness of mid-swap reads by at most the ADC residual)
 
     @property
     def rows_per_adc(self) -> int:
@@ -122,17 +125,23 @@ def _adc_codes(acc: jax.Array, cfg: EngineConfig) -> jax.Array:
     return code * lsb
 
 
-def matmul(x: jax.Array, pw: ProgrammedLinear, cfg: EngineConfig
-           ) -> jax.Array:
-    """Bit-exact crossbar execution of ``x @ W`` for x of shape (..., K)."""
-    if cfg.use_kernel:
+def matmul(x: jax.Array, pw: ProgrammedLinear, cfg: EngineConfig,
+           leak_codes: float = 0.0) -> jax.Array:
+    """Bit-exact crossbar execution of ``x @ W`` for x of shape (..., K).
+
+    ``leak_codes`` is the common-mode write-plane leakage in pre-ADC code
+    units (deep-net overlap; see ``planes.write_leak_codes``).  The Pallas
+    kernel does not model leakage, so a nonzero value routes through the
+    reference path.
+    """
+    if cfg.use_kernel and leak_codes == 0.0:
         from repro.kernels.crossbar_mac import ops as cb_ops
         return cb_ops.crossbar_matmul(x, pw, cfg)
-    return matmul_reference(x, pw, cfg)
+    return matmul_reference(x, pw, cfg, leak_codes=leak_codes)
 
 
-def matmul_reference(x: jax.Array, pw: ProgrammedLinear, cfg: EngineConfig
-                     ) -> jax.Array:
+def matmul_reference(x: jax.Array, pw: ProgrammedLinear, cfg: EngineConfig,
+                     leak_codes: float = 0.0) -> jax.Array:
     """Scan-based reference: one (pulse, slice) step at a time, ADC fused.
 
     The einsum formulation (kept as ``_matmul_reference_einsum``) holds the
@@ -141,6 +150,11 @@ def matmul_reference(x: jax.Array, pw: ProgrammedLinear, cfg: EngineConfig
     inside each step bounds peak activation memory at O(B * T * N) — the
     hardware reads one pulse against one cell plane per beat anyway, so the
     scan is also the faithful schedule.
+
+    ``leak_codes`` adds the write-plane subthreshold leakage of an
+    in-flight deep-net shadow write to BOTH differential columns before
+    each ADC conversion (modes.deepnet_read at executor scale): the term
+    is common-mode and survives only through ADC quantization.
     """
     q = cfg.quant
     lead = x.shape[:-1]
@@ -169,7 +183,8 @@ def matmul_reference(x: jax.Array, pw: ProgrammedLinear, cfg: EngineConfig
             # adjacent row-tiles stacked on the two planes: analog sum first
             acc_p = acc_p.reshape(bsz, t // 2, 2, n_pad).sum(axis=2)
             acc_n = acc_n.reshape(bsz, t // 2, 2, n_pad).sum(axis=2)
-        d = _adc_codes(acc_p, cfg) - _adc_codes(acc_n, cfg)
+        d = (_adc_codes(acc_p + leak_codes, cfg)
+             - _adc_codes(acc_n + leak_codes, cfg))
         return y_acc + bitw[a] * slcw[sl] * d.sum(axis=1), None
 
     y_int, _ = jax.lax.scan(step, jnp.zeros((bsz, n_pad), jnp.float32),

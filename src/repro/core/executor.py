@@ -27,18 +27,28 @@ functions resolve their crossbar tiles under jit, where array identity is
 meaningless (params are tracers).  The crossbar backend therefore runs the
 unrolled layer loop (``scan_layers=False`` path) — layer indices must be
 Python ints to name tiles.
+
+Deep-net-mode serving (PR 2): every resident weight is a
+:class:`~repro.core.planes.PlanePair` — a read-active plane plus a
+write-shadow twin.  :meth:`begin_swap` stages a new params tree onto the
+shadow planes in write-latency-costed chunks (:meth:`write_chunks`, meant
+to interleave with decode steps), and :meth:`promote` flips every pair
+atomically after verifying per-tile fingerprints — zero-downtime weight
+hot-swap, the paper's read-under-write overlap at the serving tier.
 """
 from __future__ import annotations
 
 import contextlib
+import hashlib
 import math
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import engine
-from repro.core.engine import EngineConfig, ProgrammedLinear
+from repro.core import engine, planes
+from repro.core.engine import EngineConfig
+from repro.core.planes import ChunkedProgram, PlanePair, SwapPlan
 
 # weight-leaf classification: final path key -> contracted input axes,
 # in the context of its parent module key
@@ -80,16 +90,37 @@ class CrossbarExecutor:
 
     def __init__(self, cfg: EngineConfig = EngineConfig(mode="deepnet")):
         self.cfg = cfg
-        self._cache: Dict[str, ProgrammedLinear] = {}
+        self._cache: Dict[str, PlanePair] = {}
         self._n_in: Dict[str, int] = {}
         # the leaf arrays the tiles were programmed from: resident
         # conductances are physical state, so serving a DIFFERENT tree
         # through them must be an error, not silent reuse.  Strong refs —
         # identity comparison stays sound (no id() reuse after GC).
         self._programmed_leaves: Optional[Tuple[Any, ...]] = None
-        self.stats = {"programmed": 0, "cache_hits": 0, "program_walks": 0}
+        self._swap: Optional[SwapPlan] = None
+        self._version = 0
+        self.stats = {"programmed": 0, "cache_hits": 0, "program_walks": 0,
+                      "swaps": 0, "swap_chunks": 0}
 
     # -- programming (the write path; once per deployment) -----------------
+
+    @staticmethod
+    def _eligible(leaves) -> List[Tuple[str, Any, int]]:
+        """(name, weight, n_in) for every eligible linear leaf, with
+        layer-stacked roots unstacked so each layer owns its tiles."""
+        out = []
+        for path, w in leaves:
+            parts = _path_parts(path)
+            n_in = _classify(parts)
+            if n_in is None:
+                continue
+            if parts[0] in _STACKED_ROOTS:
+                for layer in range(w.shape[0]):
+                    name = ".".join([parts[0], str(layer)] + parts[1:])
+                    out.append((name, w[layer], n_in))
+            else:
+                out.append((".".join(parts), w, n_in))
+        return out
 
     def program_params(self, params: Any) -> int:
         """Program every eligible linear weight in ``params``; idempotent.
@@ -108,21 +139,15 @@ class CrossbarExecutor:
         elif not self._same_tree(tree):
             raise RuntimeError(
                 "crossbar tiles are already programmed from a different "
-                "params tree; resident weights are physical state — build "
-                "a fresh model/executor to deploy new params")
+                "params tree; resident weights are physical state — use "
+                "swap(params) / begin_swap(params) for a zero-downtime "
+                "hot-swap onto the shadow planes")
         self.stats["program_walks"] += 1
         new = 0
-        for path, w in leaves:
-            parts = _path_parts(path)
-            n_in = _classify(parts)
-            if n_in is None:
-                continue
-            if parts[0] in _STACKED_ROOTS:
-                for layer in range(w.shape[0]):
-                    name = ".".join([parts[0], str(layer)] + parts[1:])
-                    new += self._program_one(name, w[layer], n_in)
-            else:
-                new += self._program_one(name := ".".join(parts), w, n_in)
+        for name, w, n_in in self._eligible(leaves):
+            new += self._program_one(name, w, n_in)
+        if new:
+            self._version += 1
         return new
 
     def _program_one(self, name: str, w: jax.Array, n_in: int) -> int:
@@ -131,7 +156,9 @@ class CrossbarExecutor:
             return 0
         k = math.prod(w.shape[:n_in])
         w2d = jnp.asarray(w, jnp.float32).reshape(k, -1)
-        self._cache[name] = engine.program(w2d, self.cfg)
+        self._cache[name] = PlanePair(
+            name, plane_a=engine.program(w2d, self.cfg),
+            fp_a=planes.fingerprint_weight(w2d))
         self._n_in[name] = n_in
         self.stats["programmed"] += 1
         return 1
@@ -174,17 +201,176 @@ class CrossbarExecutor:
         """Resident-tile execution of ``x @ W`` for the named weight.
 
         ``w`` is only consulted for its (static) shape — the arithmetic
-        reads the programmed tiles, which is the point.
+        reads the read-active plane of the named pair.  While a hot-swap
+        is in flight and ``cfg.swap_leakage`` is set, reads carry the
+        write plane's subthreshold leakage (a trace-time constant: the
+        overlay applies to eager / freshly traced reads, not to an
+        already-compiled serving step).
         """
-        pw = self._cache[name]
+        pw = self._cache[name].active
         n_in = self._n_in[name]
         lead = x.shape[:-n_in]
         k = math.prod(x.shape[-n_in:])
         if k != pw.k:
             raise ValueError(f"{name}: input dim {k} != programmed {pw.k}")
+        leak = (planes.write_leak_codes(self.cfg)
+                if self._swap is not None and self.cfg.swap_leakage else 0.0)
         y = engine.matmul(x.reshape(*lead, k).astype(jnp.float32), pw,
-                          self.cfg)
+                          self.cfg, leak_codes=leak)
         return y.reshape(*lead, *w.shape[n_in:]).astype(x.dtype)
+
+    # -- fingerprints / versioning -------------------------------------------
+
+    def fingerprint(self, name: Optional[str] = None) -> str:
+        """Digest of the source weights the read-active plane(s) were
+        programmed (and write-verified) from — checkpoint-content
+        addressing, not a raw cell-code hash (``planes.fingerprint_tiles``
+        is the tile-state digest write-verify uses).
+
+        With ``name``: the per-tile fingerprint of that weight's active
+        plane.  Without: a combined digest over all resident tiles (sorted
+        by name) — two executors serving identical weights agree, and any
+        mixed-plane state mid-promotion would produce a digest matching
+        neither checkpoint (asserted by the overlap property test).
+        """
+        if name is not None:
+            return self._cache[name].fingerprint
+        h = hashlib.blake2b(digest_size=8)
+        for n in sorted(self._cache):
+            h.update(n.encode())
+            h.update(self._cache[n].fingerprint.encode())
+        return h.hexdigest()
+
+    def fingerprints(self) -> Dict[str, str]:
+        """Per-tile fingerprints of every read-active plane."""
+        return {n: p.fingerprint for n, p in sorted(self._cache.items())}
+
+    @property
+    def programmed_version(self) -> int:
+        """Monotone deploy counter: 0 = unprogrammed; +1 per initial
+        program walk that wrote tiles; +1 per promoted hot-swap."""
+        return self._version
+
+    # -- deep-net hot-swap (write the shadow planes, then flip) --------------
+
+    @property
+    def swap_in_flight(self) -> bool:
+        return self._swap is not None
+
+    def begin_swap(self, params: Any) -> SwapPlan:
+        """Stage ``params`` for programming onto the shadow planes.
+
+        The incoming tree must carry exactly the resident tile set with
+        matching shapes (a new checkpoint, fine-tuned delta, or
+        recalibrated conductances — not a different architecture).
+        Returns the chunk work-list; drive it with :meth:`write_chunks`
+        and finish with :meth:`promote`.
+        """
+        if not self._cache:
+            raise RuntimeError("nothing programmed; call program_params "
+                               "before begin_swap")
+        if self._swap is not None:
+            raise RuntimeError("a hot-swap is already in flight; promote() "
+                               "or abort_swap() first")
+        leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+        if any(isinstance(w, jax.core.Tracer) for _, w in leaves):
+            raise TypeError("begin_swap needs concrete arrays (eager, "
+                            "outside jit)")
+        programs = []
+        for name, w, n_in in self._eligible(leaves):
+            if name not in self._cache:
+                raise ValueError(
+                    f"swap tree carries {name!r} which has no resident "
+                    f"tiles; hot-swap reprograms existing planes only")
+            pw = self._cache[name].active
+            k = math.prod(w.shape[:n_in])
+            w2d = jnp.asarray(w, jnp.float32).reshape(k, -1)
+            if (k, w2d.shape[1]) != (pw.k, pw.n):
+                raise ValueError(
+                    f"{name}: swap shape {(k, w2d.shape[1])} != resident "
+                    f"{(pw.k, pw.n)}")
+            programs.append(ChunkedProgram(name, w2d, self.cfg))
+        missing = set(self._cache) - {cp.name for cp in programs}
+        if missing:
+            raise ValueError(
+                f"swap tree is missing resident tiles: {sorted(missing)}")
+        self._swap = SwapPlan(programs, tuple(w for _, w in leaves), params)
+        return self._swap
+
+    def write_chunks(self, n: int = 1) -> int:
+        """Program up to ``n`` write-latency-costed chunks of the staged
+        swap (each is one t_write pulse in the device-time model); returns
+        the number of chunks still unwritten."""
+        if self._swap is None:
+            raise RuntimeError("no hot-swap in flight")
+        for _ in range(n):
+            if self._swap.done:
+                break
+            finished = self._swap.write_chunk()
+            self.stats["swap_chunks"] += 1
+            if finished is not None:
+                staged = finished.finish()
+                # write-verify against an independent one-shot programming
+                # (paced here, inside the overlap window — not at the flip)
+                finished.verify(staged)
+                self._cache[finished.name].stage(staged, finished.fp)
+        return self._swap.remaining
+
+    def promote(self) -> Any:
+        """Atomically flip every plane pair to the freshly written shadow.
+
+        Every staged plane was already write-verified against an
+        independent one-shot programming when its last chunk landed
+        (``ChunkedProgram.verify``); this gate checks completeness and
+        ownership — every tile must hold a shadow staged by THIS plan,
+        not a stale or foreign one — before any pair flips, so a read can
+        never observe a mixed-plane state.  Returns the promoted params
+        tree (the caller serves embeddings/norms from it).
+        """
+        plan = self._swap
+        if plan is None:
+            raise RuntimeError("no hot-swap in flight")
+        if not plan.done:
+            raise RuntimeError(
+                f"swap not complete: {plan.remaining} chunks unwritten")
+        for name, fp in plan.expected_fingerprints.items():
+            staged = self._cache[name].shadow_fingerprint
+            if staged != fp:
+                raise RuntimeError(
+                    f"{name}: staged shadow fingerprint {staged} != "
+                    f"checkpoint {fp}; refusing to promote")
+        for cp in plan.programs:
+            self._cache[cp.name].flip()
+        self._programmed_leaves = plan.leaves
+        self._version += 1
+        self.stats["swaps"] += 1
+        self._swap = None
+        return plan.params
+
+    def abort_swap(self) -> None:
+        """Drop an in-flight swap; staged shadow planes are cleared and the
+        read-active planes keep serving."""
+        if self._swap is None:
+            return
+        for cp in self._swap.programs:
+            self._cache[cp.name].drop_shadow()
+        self._swap = None
+
+    def swap(self, params: Any, chunk_burst: int = 64) -> Dict[str, Any]:
+        """Blocking convenience swap: stage, write every chunk, promote.
+
+        The overlapped serving path (serve/hotswap.py) interleaves
+        ``write_chunks`` with decode steps instead; this is the
+        stop-the-world comparison point and the API for offline reloads.
+        """
+        plan = self.begin_swap(params)
+        while not plan.done:
+            self.write_chunks(chunk_burst)
+        self.promote()
+        return {"n_tiles": len(plan.programs),
+                "n_chunks": plan.total_chunks,
+                "device_write_s": plan.device_write_time(),
+                "programmed_version": self._version}
 
     # -- bookkeeping ---------------------------------------------------------
 
@@ -194,8 +380,15 @@ class CrossbarExecutor:
 
     @property
     def n_devices(self) -> int:
-        """Total programmed memristors across all resident tile grids."""
-        return sum(pw.n_devices for pw in self._cache.values())
+        """Programmed memristors serving reads (read-active planes) —
+        the same quantity reported before plane pairing, so bench
+        trajectories stay comparable."""
+        return sum(pair.n_devices for pair in self._cache.values())
+
+    @property
+    def n_devices_physical(self) -> int:
+        """Total memristors in the stacks, write-shadow twins included."""
+        return sum(pair.n_devices_physical for pair in self._cache.values())
 
     @contextlib.contextmanager
     def activate(self):

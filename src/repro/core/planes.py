@@ -1,0 +1,287 @@
+"""Ping-pong tile planes: ``modes.StackState`` lifted to executor scale.
+
+The paper's deep-net mode pairs every crossbar plane with a stacked twin
+behind complementary RE signals: one plane serves reads while the other is
+programmed, and an RE flip promotes the freshly written plane without ever
+interrupting the read stream (paper §III-B).  ``modes.py`` models that at
+the array level (two conductance matrices + a read selector); this module
+is the same state machine at the scale ``CrossbarExecutor`` operates on —
+whole ``ProgrammedLinear`` tile grids instead of single (r, m) planes:
+
+  * :class:`PlanePair` — a read-active plane and a write-shadow plane per
+    named weight, plus the content fingerprints of both planes.
+  * :class:`ChunkedProgram` — incremental programming of one weight onto a
+    shadow plane, one row-tile chunk at a time.  Each chunk is one write
+    pulse of ``t_write`` in the device-time model (``core/timing.py``), so
+    a serving loop can interleave chunks between decode steps exactly the
+    way the paper hides writes under reads.
+  * :class:`SwapPlan` — the ordered chunk work-list for a whole params
+    tree, consumed by ``CrossbarExecutor.write_chunks`` and promoted
+    atomically by ``CrossbarExecutor.promote``.
+  * :func:`write_leak_codes` — the only coupling of an in-flight write
+    into the read-out: N1 subthreshold leakage (paper Fig. 3c), expressed
+    in pre-ADC code units so ``engine.matmul_reference`` can add it as a
+    common-mode term.
+
+Chunked programming is bit-exact with ``engine.program``: the assembled
+shadow plane is the same ``ProgrammedLinear`` the one-shot path builds
+(asserted in tests/test_hotswap.py), so a promoted swap serves exactly the
+arithmetic a cold deploy of the new weights would.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.engine import EngineConfig, ProgrammedLinear, _pad_to
+
+
+def fingerprint_weight(w2d: jax.Array) -> str:
+    """Content digest of a (K, N) float32 weight — the identity of what a
+    plane was programmed from (stale-params checks, promotion audit)."""
+    arr = np.asarray(jax.device_get(jnp.asarray(w2d, jnp.float32)))
+    h = hashlib.blake2b(digest_size=8)
+    h.update(str(arr.shape).encode())
+    h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def fingerprint_tiles(pw: ProgrammedLinear) -> str:
+    """Content digest of PROGRAMMED tile state (cell codes + scales) —
+    what write-verify compares, independent of where the codes came from
+    (chunked assembly vs one-shot ``engine.program``)."""
+    h = hashlib.blake2b(digest_size=8)
+    h.update(str((pw.k, pw.n, pw.pos.shape)).encode())
+    for arr in (pw.pos, pw.neg, pw.w_scale):
+        h.update(np.asarray(jax.device_get(arr)).tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class PlanePair:
+    """A stacked pair of tile-grid planes plus which one is read-active.
+
+    Mirrors ``modes.StackState`` (g_top, g_bot, read_top) with whole
+    ``ProgrammedLinear`` grids in place of conductance matrices.  The
+    shadow slot is ``None`` until a hot-swap stages new weights into it.
+    """
+    name: str
+    plane_a: Optional[ProgrammedLinear] = None
+    plane_b: Optional[ProgrammedLinear] = None
+    read_a: bool = True
+    fp_a: Optional[str] = None
+    fp_b: Optional[str] = None
+
+    @property
+    def active(self) -> ProgrammedLinear:
+        pw = self.plane_a if self.read_a else self.plane_b
+        if pw is None:
+            raise RuntimeError(f"{self.name}: read-active plane unprogrammed")
+        return pw
+
+    @property
+    def shadow(self) -> Optional[ProgrammedLinear]:
+        return self.plane_b if self.read_a else self.plane_a
+
+    @property
+    def fingerprint(self) -> str:
+        fp = self.fp_a if self.read_a else self.fp_b
+        if fp is None:
+            raise RuntimeError(f"{self.name}: read-active plane unprogrammed")
+        return fp
+
+    @property
+    def shadow_fingerprint(self) -> Optional[str]:
+        return self.fp_b if self.read_a else self.fp_a
+
+    @property
+    def n_devices(self) -> int:
+        """Memristors holding the weights being SERVED (the read-active
+        plane) — comparable across deploys and with the pre-plane-pair
+        counts.  The stacked twin doubles the physical device count
+        (:attr:`n_devices_physical`) whether or not it is programmed."""
+        return self.active.n_devices
+
+    @property
+    def n_devices_physical(self) -> int:
+        return 2 * self.active.n_devices
+
+    def stage(self, pw: ProgrammedLinear, fp: str) -> None:
+        """Write ``pw`` into the shadow plane (RE low: column-isolated)."""
+        if self.read_a:
+            self.plane_b, self.fp_b = pw, fp
+        else:
+            self.plane_a, self.fp_a = pw, fp
+
+    def flip(self) -> None:
+        """Promote the shadow plane (the RE swap of ``modes.deepnet_swap``)."""
+        if self.shadow is None:
+            raise RuntimeError(f"{self.name}: no staged shadow plane to "
+                               f"promote")
+        self.read_a = not self.read_a
+
+    def drop_shadow(self) -> None:
+        if self.read_a:
+            self.plane_b, self.fp_b = None, None
+        else:
+            self.plane_a, self.fp_a = None, None
+
+
+class ChunkedProgram:
+    """Incremental programming of one (K, N) weight onto a shadow plane.
+
+    One chunk = one row-tile (``cfg.tile_rows`` wordlines) quantized and
+    written across all cell-bit slices — one ``t_write`` pulse in the
+    device-time model (slices and column tiles are independent stacks and
+    program in parallel; row-tiles share the write driver and serialize).
+    The per-chunk arithmetic replicates ``engine.program`` exactly, so
+    ``finish()`` assembles a bit-identical ``ProgrammedLinear``.
+    """
+
+    def __init__(self, name: str, w2d: jax.Array, cfg: EngineConfig):
+        self.name, self.cfg = name, cfg
+        q = cfg.quant
+        w2d = jnp.asarray(w2d, jnp.float32)
+        self.k, self.n = w2d.shape
+        self.fp = fingerprint_weight(w2d)
+        self._w2d = w2d          # retained for write-verify (see verify())
+        # scales come from the UNPADDED matrix (engine.program order)
+        self._scale = quant.weight_scales(w2d, q)
+        r = cfg.tile_rows
+        self.t = -(-self.k // r)
+        self.n_pad = -(-self.n // cfg.tile_cols) * cfg.tile_cols
+        self._w_pad = _pad_to(w2d, self.t * r, axis=0)  # rows only; column
+        # padding happens on the quantized slices (zero cells), matching
+        # engine.program's zero-pad of w_int
+        self._pos: List[jax.Array] = []
+        self._neg: List[jax.Array] = []
+
+    @property
+    def total_chunks(self) -> int:
+        return self.t
+
+    @property
+    def chunks_done(self) -> int:
+        return len(self._pos)
+
+    @property
+    def done(self) -> bool:
+        return self.chunks_done >= self.total_chunks
+
+    def write_chunk(self) -> None:
+        """Quantize and program the next row-tile of the shadow plane."""
+        if self.done:
+            raise RuntimeError(f"{self.name}: all chunks already written")
+        q = self.cfg.quant
+        r = self.cfg.tile_rows
+        i = self.chunks_done
+        rows = self._w_pad[i * r:(i + 1) * r]
+        qmax = 2.0 ** q.w_bits - 1.0
+        w_int = jnp.clip(quant.ste_round(rows / self._scale), -qmax, qmax)
+        pos, neg = quant.to_slices(w_int, q)           # (S, r, n)
+        pos = _pad_to(pos, self.n_pad, axis=2)         # zero cells, same as
+        neg = _pad_to(neg, self.n_pad, axis=2)         # engine.program
+        self._pos.append(pos.astype(jnp.int8))
+        self._neg.append(neg.astype(jnp.int8))
+
+    def finish(self) -> ProgrammedLinear:
+        """Assemble the fully written shadow plane (bit-exact with
+        ``engine.program`` on the same weight)."""
+        if not self.done:
+            raise RuntimeError(
+                f"{self.name}: {self.total_chunks - self.chunks_done} "
+                f"chunks still unwritten")
+        pos = jnp.stack(self._pos, axis=1)             # (S, T, R, n_pad)
+        neg = jnp.stack(self._neg, axis=1)
+        w_scale = self._scale
+        if self.cfg.quant.per_channel:
+            w_scale = _pad_to(w_scale, self.n_pad, axis=1)
+        return ProgrammedLinear(pos, neg, w_scale, self.k, self.n)
+
+    def verify(self, staged: ProgrammedLinear) -> None:
+        """Write-verify: the chunk-assembled plane must match an
+        independent one-shot programming of the same weight (RRAM
+        program-and-verify, at tile-grid scale).  This is the check that
+        catches assembly bugs — chunk ordering, padding, scale handling —
+        before a plane can ever be promoted into the read path.
+        """
+        from repro.core import engine
+        ref = fingerprint_tiles(engine.program(self._w2d, self.cfg))
+        got = fingerprint_tiles(staged)
+        if got != ref:
+            raise RuntimeError(
+                f"{self.name}: write-verify failed — assembled shadow "
+                f"tiles {got} != one-shot programming {ref}")
+
+
+@dataclasses.dataclass
+class SwapPlan:
+    """Ordered chunk work-list for hot-swapping a whole params tree.
+
+    One write port: chunks serialize across all tiles, so total device
+    time is ``total_chunks * t_write`` — the quantity the overlapped
+    schedule hides under the read stream.
+    """
+    programs: List[ChunkedProgram]
+    leaves: Tuple[Any, ...]        # incoming tree leaves (identity check)
+    params: Any                    # the incoming tree itself
+    cursor: int = 0
+    chunks_done: int = 0
+
+    @property
+    def total_chunks(self) -> int:
+        return sum(cp.total_chunks for cp in self.programs)
+
+    @property
+    def remaining(self) -> int:
+        return self.total_chunks - self.chunks_done
+
+    @property
+    def done(self) -> bool:
+        return self.remaining == 0
+
+    @property
+    def expected_fingerprints(self) -> Dict[str, str]:
+        return {cp.name: cp.fp for cp in self.programs}
+
+    def write_chunk(self) -> Optional[ChunkedProgram]:
+        """Advance one chunk; returns the program if this chunk finished
+        its weight (the caller stages it onto the shadow plane)."""
+        if self.done:
+            return None
+        cp = self.programs[self.cursor]
+        cp.write_chunk()
+        self.chunks_done += 1
+        if cp.done:
+            self.cursor += 1
+            return cp
+        return None
+
+    def device_write_time(self) -> float:
+        """Total modeled programming time [s]: one t_write per chunk."""
+        return self.total_chunks * self.programs[0].cfg.params.t_write
+
+
+def write_leak_codes(cfg: EngineConfig) -> float:
+    """Worst-case common-mode leakage of an in-flight shadow write, in
+    pre-ADC code units.
+
+    While a shadow plane is programmed, its OFF N1 transistors leak
+    ~``i_leak_0`` per cell into the shared column (paper Fig. 3c); a full
+    column of ``tile_rows`` writing cells injects ``tile_rows * i_leak_0``.
+    One cell-code unit of column current is ``v_read`` across the
+    conductance spacing, so the ratio is the leak in the accumulator units
+    ``engine._adc_codes`` digitizes.  Differential columns cancel the term
+    except through ADC quantization — which is exactly the paper's
+    "negligible" claim, and what tests assert.
+    """
+    p = cfg.params
+    base = 2 ** cfg.quant.bits_per_cell
+    i_unit = p.v_read * (p.g_set - p.g_reset) / (base - 1)
+    return cfg.tile_rows * p.i_leak_0 / i_unit

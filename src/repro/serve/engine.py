@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.model import Model
+from repro.serve.hotswap import HotSwapper
 
 
 def make_prefill_step(model: Model):
@@ -98,9 +99,68 @@ class BatchScheduler:
             # read-at-inference)
             executor.ensure_programmed(params)
         self._decode = jax.jit(make_decode_step(model), donate_argnums=(2,))
+        self._swap: Optional[HotSwapper] = None
+        self.swap_history: List[Dict[str, Any]] = []
 
     def submit(self, req: Request):
         self.queue.append(req)
+
+    # -- deep-net-mode hot-swap (serve reads while shadow planes program) ----
+
+    def begin_hot_swap(self, new_params, chunks_per_step: int = 8
+                       ) -> HotSwapper:
+        """Start programming ``new_params`` onto the write-shadow planes.
+
+        Chunks are written between decode steps (inside :meth:`step`);
+        when every chunk lands, the planes flip atomically at a step
+        boundary and subsequent tokens come from the new weights — no
+        request is dropped and no decode step reads mixed planes.
+        """
+        if self.model.executor is None:
+            raise RuntimeError("hot-swap requires the crossbar backend "
+                               "(ModelConfig(backend='crossbar'))")
+        if self._swap is not None:
+            raise RuntimeError("a hot-swap is already in flight")
+        self._swap = HotSwapper(self.model.executor, new_params,
+                                chunks_per_step=chunks_per_step)
+        return self._swap
+
+    @property
+    def swap_in_flight(self) -> bool:
+        return self._swap is not None
+
+    def stop_the_world_swap(self, new_params) -> Dict[str, Any]:
+        """Blocking reprogram (the conventional-2-D-array policy): serving
+        stalls while every chunk is written, the planes flip, and the
+        decode step re-traces.  The comparison baseline for the overlapped
+        path — same end state, but no tokens flow during the swap."""
+        if self.model.executor is None:
+            raise RuntimeError("hot-swap requires the crossbar backend "
+                               "(ModelConfig(backend='crossbar'))")
+        if self._swap is not None:
+            raise RuntimeError("a hot-swap is already in flight")
+        stats = self.model.executor.swap(new_params)
+        self.params = new_params
+        self._decode = jax.jit(make_decode_step(self.model),
+                               donate_argnums=(2,))
+        return stats
+
+    def _advance_swap(self):
+        """Program a burst of chunks; promote at the step boundary once
+        the shadow planes are fully written."""
+        sw = self._swap
+        if sw is None:
+            return
+        sw.step()
+        if sw.done:
+            self.params = sw.promote()
+            # resident planes are compile-time constants of the jitted
+            # decode step (program-at-load); the flip invalidates that
+            # closure, so rebuild it — one re-trace, zero dropped requests
+            self._decode = jax.jit(make_decode_step(self.model),
+                                   donate_argnums=(2,))
+            self.swap_history.append(sw.report(batch_size=self.n_slots))
+            self._swap = None
 
     def _admit(self):
         for slot, cur in enumerate(self.slots):
@@ -123,12 +183,19 @@ class BatchScheduler:
                 self.slots[slot] = req
 
     def step(self) -> List[Request]:
-        """One decode step for all active slots; returns finished requests."""
+        """One decode step for all active slots; returns finished requests.
+
+        An in-flight hot-swap advances first — shadow-plane chunks program
+        strictly between decode steps, and promotion happens here at the
+        boundary, so every decode call reads one consistent plane set."""
+        self._advance_swap()
         self._admit()
         if all(s is None for s in self.slots):
             return []
         self.tokens, self.cache = self._decode(
             self.params, self.tokens, self.cache)
+        if self._swap is not None:
+            self._swap.note_decode_step()
         finished = []
         for i, req in enumerate(self.slots):
             if req is None:

@@ -1,0 +1,257 @@
+"""Deep-net-mode serving subsystem: ping-pong plane pairs, chunked
+shadow-plane programming, fingerprint/versioning API, atomic promotion,
+and the BatchScheduler hot-swap integration."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import engine as eng
+from repro.core import planes
+from repro.core.engine import EngineConfig
+from repro.core.executor import CrossbarExecutor
+from repro.core.planes import ChunkedProgram
+from repro.core.quant import QuantConfig
+from repro.models.model import build_model
+from repro.serve.engine import BatchScheduler, Request
+from repro.serve.hotswap import HotSwapper, finetune_delta, overlap_report
+
+CFG = EngineConfig(tile_rows=32, tile_cols=32, mode="deepnet",
+                   quant=QuantConfig(w_bits=4, in_bits=8, adc_bits=10))
+HIFI = EngineConfig(tile_rows=128, tile_cols=128, mode="deepnet",
+                    quant=QuantConfig(w_bits=8, in_bits=10, adc_bits=14))
+
+
+def _w(key, k, n):
+    return jax.random.normal(jax.random.PRNGKey(key), (k, n)) * 0.3
+
+
+def _ft(params):
+    return finetune_delta(params)
+
+
+# -- chunked shadow-plane programming -----------------------------------------
+
+@pytest.mark.parametrize("k,n,per_channel", [
+    (96, 80, True), (64, 33, True), (33, 17, False)])
+def test_chunked_program_bit_exact_vs_engine_program(k, n, per_channel):
+    """A chunk-by-chunk shadow write must assemble the exact
+    ProgrammedLinear the one-shot path builds."""
+    cfg = dataclasses.replace(
+        CFG, quant=dataclasses.replace(CFG.quant, per_channel=per_channel))
+    w = _w(k + n, k, n)
+    cp = ChunkedProgram("tile", w, cfg)
+    assert cp.total_chunks == -(-k // cfg.tile_rows)
+    with pytest.raises(RuntimeError, match="unwritten"):
+        cp.finish()
+    while not cp.done:
+        cp.write_chunk()
+    got, want = cp.finish(), eng.program(w, cfg)
+    assert jnp.array_equal(got.pos, want.pos)
+    assert jnp.array_equal(got.neg, want.neg)
+    assert jnp.array_equal(jnp.asarray(got.w_scale),
+                           jnp.asarray(want.w_scale))
+    assert (got.k, got.n) == (want.k, want.n)
+
+
+def test_write_verify_catches_corrupt_assembly():
+    """A mis-assembled shadow plane (here: chunk order scrambled) must
+    fail write-verify against the independent one-shot programming."""
+    w = _w(11, 96, 48)
+    cp = ChunkedProgram("tile", w, CFG)
+    while not cp.done:
+        cp.write_chunk()
+    cp.verify(cp.finish())                    # clean assembly passes
+    cp._pos[0], cp._pos[1] = cp._pos[1], cp._pos[0]
+    with pytest.raises(RuntimeError, match="write-verify failed"):
+        cp.verify(cp.finish())
+
+
+# -- fingerprint / version public API -----------------------------------------
+
+def test_fingerprint_and_programmed_version_api():
+    w = _w(0, 64, 48)
+    ex = CrossbarExecutor(CFG)
+    assert ex.programmed_version == 0
+    ex.program_params({"head": w})
+    assert ex.programmed_version == 1
+    # content-addressed: a second executor over the same weights agrees
+    ex2 = CrossbarExecutor(CFG)
+    ex2.program_params({"head": jnp.array(w)})
+    assert ex.fingerprint("head") == ex2.fingerprint("head")
+    assert ex.fingerprint() == ex2.fingerprint()
+    assert ex.fingerprints() == {"head": ex.fingerprint("head")}
+    # ...and different weights disagree
+    ex3 = CrossbarExecutor(CFG)
+    ex3.program_params({"head": w + 0.5})
+    assert ex.fingerprint() != ex3.fingerprint()
+    # re-walk (cache hit) does not bump the version
+    ex.program_params({"head": w})
+    assert ex.programmed_version == 1
+
+
+def test_swap_serves_new_weights_bit_exact_and_bumps_version():
+    w_a, w_b = _w(1, 80, 48), _w(2, 80, 48)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 80))
+    ex = CrossbarExecutor(CFG)
+    ex.program_params({"head": w_a})
+    y_a = ex.linear(x, w_a, "head")
+    stats = ex.swap({"head": w_b})
+    assert stats["n_chunks"] == 3 and stats["programmed_version"] == 2
+    assert ex.programmed_version == 2 and ex.stats["swaps"] == 1
+    cold = CrossbarExecutor(CFG)
+    cold.program_params({"head": w_b})
+    assert jnp.array_equal(ex.linear(x, w_b, "head"),
+                           cold.linear(x, w_b, "head"))
+    assert ex.fingerprint() == cold.fingerprint()
+    # swap back: the same stacked pair ping-pongs in the other direction
+    ex.swap({"head": w_a})
+    assert jnp.array_equal(ex.linear(x, w_a, "head"), y_a)
+    assert ex.programmed_version == 3
+
+
+def test_swap_validation_and_atomicity():
+    w = _w(4, 64, 32)
+    ex = CrossbarExecutor(CFG)
+    with pytest.raises(RuntimeError, match="program_params"):
+        ex.begin_swap({"head": w})
+    ex.program_params({"head": w})
+    with pytest.raises(ValueError, match="shape"):
+        ex.begin_swap({"head": _w(5, 32, 32)})
+    with pytest.raises(ValueError, match="no resident tiles"):
+        ex.begin_swap({"head": w, "blocks": {"0": {"mlp": {"wi": w}}}})
+    plan = ex.begin_swap({"head": w + 0.1})
+    with pytest.raises(RuntimeError, match="already in flight"):
+        ex.begin_swap({"head": w + 0.2})
+    # promotion is all-or-nothing: refuses while chunks are unwritten
+    ex.write_chunks(1)
+    assert not plan.done
+    with pytest.raises(RuntimeError, match="unwritten"):
+        ex.promote()
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 64))
+    # mid-swap reads still serve the OLD read-active plane
+    cold = CrossbarExecutor(CFG)
+    cold.program_params({"head": w})
+    assert jnp.array_equal(ex.linear(x, w, "head"),
+                           cold.linear(x, w, "head"))
+    # abort drops the staged shadow and the pair keeps serving
+    ex.abort_swap()
+    assert not ex.swap_in_flight
+    assert jnp.array_equal(ex.linear(x, w, "head"),
+                           cold.linear(x, w, "head"))
+    ex.swap({"head": w + 0.1})   # a fresh swap still works after abort
+    assert ex.programmed_version == 2
+
+
+# -- write-plane leakage during overlap ----------------------------------------
+
+def test_write_leakage_is_common_mode_and_below_adc_resolution():
+    """Paper Fig. 3c: the only coupling of an in-flight write into the
+    read-out is N1 subthreshold leakage — orders below one ADC code."""
+    cfg = dataclasses.replace(CFG, swap_leakage=True)
+    leak = planes.write_leak_codes(cfg)
+    assert 0.0 < leak < 1e-3   # far below one pre-ADC code unit
+    w = _w(7, 64, 48)
+    x = jax.random.normal(jax.random.PRNGKey(8), (4, 64))
+    ex = CrossbarExecutor(cfg)
+    ex.program_params({"head": w})
+    y_clean = ex.linear(x, w, "head")
+    ex.begin_swap({"head": w + 0.1})   # overlap window opens
+    y_overlap = ex.linear(x, w, "head")
+    ex.abort_swap()
+    # common-mode through differential columns + below ADC resolution:
+    # the perturbation must round away entirely
+    assert jnp.array_equal(y_overlap, y_clean)
+    # the engine hook itself is live: a code-scale leak does perturb
+    pw = eng.program(w, cfg)
+    y_big = eng.matmul_reference(x, pw, cfg, leak_codes=3.7)
+    assert not jnp.array_equal(y_big, eng.matmul_reference(x, pw, cfg))
+
+
+# -- device-time model ---------------------------------------------------------
+
+def test_overlap_report_matches_paper_figures():
+    """10-bit reads vs 250 ns writes: steady-state overlap = 1 - 250/350
+    = 28.6 % ~ paper's 29 %; overlapped serving >= 2x stop-the-world."""
+    cfg = HIFI   # in_bits = 10: the paper's operating point
+    rep = overlap_report(cfg, n_grids=15, n_chunks=17, batch_size=2)
+    assert abs(rep["overlap_frac_steady_state"] - 0.29) <= 0.02
+    assert rep["within_2pts_of_paper"]
+    assert rep["throughput_ratio_overlap_vs_stop_world"] >= 2.0
+    assert rep["sustains_2x_during_swap"]
+    # window algebra: overlapped hides the whole write under reads
+    assert rep["device_swap_window_overlapped_s"] == pytest.approx(
+        17 * cfg.params.t_write)
+    assert rep["device_swap_window_stop_world_s"] == pytest.approx(
+        17 * cfg.params.t_write + rep["device_decode_step_s"])
+
+
+# -- scheduler integration -----------------------------------------------------
+
+def _crossbar_cfg():
+    return dataclasses.replace(get_config("qwen3_4b", smoke=True),
+                               backend="crossbar", xbar=HIFI,
+                               dtype=jnp.float32)
+
+
+@pytest.mark.slow
+def test_scheduler_hot_swap_zero_dropped_requests():
+    cfg = _crossbar_cfg()
+    model = build_model(cfg)
+    params_a = model.init(jax.random.PRNGKey(0))
+    params_b = _ft(params_a)
+    sched = BatchScheduler(model, params_a, n_slots=2, max_len=48)
+    for rid in range(4):
+        p = jax.random.randint(jax.random.PRNGKey(rid), (6,), 0,
+                               cfg.vocab - 1).astype(jnp.int32)
+        sched.submit(Request(rid=rid, prompt=p, max_new=12))
+    done, steps = [], 0
+    while steps < 4:
+        done += sched.step()
+        steps += 1
+    hs = sched.begin_hot_swap(params_b, chunks_per_step=4)
+    assert sched.swap_in_flight
+    with pytest.raises(RuntimeError, match="already in flight"):
+        sched.begin_hot_swap(params_b)
+    while (len(done) < 4 or sched.swap_in_flight) and steps < 200:
+        done += sched.step()
+        steps += 1
+    # zero dropped: every request completed across the swap boundary
+    assert len(done) == 4
+    assert all(len(r.out) >= 12 for r in done)
+    # the flip landed: executor serves the new checkpoint's content
+    assert model.executor.programmed_version == 2
+    cold = CrossbarExecutor(HIFI)
+    cold.program_params(params_b)
+    assert model.executor.fingerprint() == cold.fingerprint()
+    # report recorded with the acceptance figures
+    (rep,) = sched.swap_history
+    assert rep["sustains_2x_during_swap"]
+    assert rep["within_2pts_of_paper"]
+    assert hs.promoted and hs.wall_swap_s > 0
+
+
+def test_scheduler_rejects_hot_swap_on_digital_backend():
+    cfg = get_config("qwen3_4b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = BatchScheduler(model, params, n_slots=2, max_len=32)
+    with pytest.raises(RuntimeError, match="crossbar"):
+        sched.begin_hot_swap(params)
+
+
+def test_hotswapper_drives_executor_without_scheduler():
+    w = _w(9, 96, 64)
+    ex = CrossbarExecutor(CFG)
+    ex.program_params({"head": w})
+    hs = HotSwapper(ex, {"head": w + 0.05}, chunks_per_step=2)
+    assert hs.remaining == 3
+    assert hs.step() == 1        # two chunks written
+    assert not hs.done
+    assert hs.step() == 0        # last chunk
+    assert hs.done
+    hs.promote()
+    assert ex.programmed_version == 2
+    assert hs.step() == 0        # idempotent after promotion

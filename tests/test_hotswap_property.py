@@ -1,0 +1,149 @@
+"""Property test: executor-scale deep-net overlap correctness.
+
+A hot-swap mid-generation must be bit-exact with (a) the pre-swap
+weights for every token produced before the flip and (b) the post-swap
+weights for every token after it, with no decode step ever reading a
+mixed set of planes — the serving-tier analogue of pipeline.py's
+"the pipeline reorders *time*, not *math*" invariant.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+# randomized sweep under hypothesis when available (the [test] extra);
+# otherwise a fixed parametrized sweep of the same property
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.engine import EngineConfig  # noqa: E402
+from repro.core.executor import CrossbarExecutor  # noqa: E402
+from repro.core.quant import QuantConfig  # noqa: E402
+from repro.models.model import ModelConfig, build_model  # noqa: E402
+from repro.serve.hotswap import HotSwapper  # noqa: E402
+
+TINY = ModelConfig(
+    name="tiny", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv=2, head_dim=16, d_ff=64, vocab=128, backend="crossbar",
+    dtype=jnp.float32,
+    xbar=EngineConfig(tile_rows=32, tile_cols=32, mode="deepnet",
+                      quant=QuantConfig(w_bits=4, in_bits=6, adc_bits=12)))
+
+N_STEPS = 8
+
+
+def _params_pair(delta_seed):
+    model = build_model(TINY)
+    params_a = model.init(jax.random.PRNGKey(0))
+    leaves, tdef = jax.tree_util.tree_flatten(params_a)
+    params_b = jax.tree_util.tree_unflatten(tdef, [
+        w + 0.05 * jax.random.normal(
+            jax.random.fold_in(jax.random.PRNGKey(delta_seed), i), w.shape)
+        for i, w in enumerate(leaves)])
+    return model, params_a, params_b
+
+
+def _prefill(model, params, prompt):
+    cache = model.init_cache(1, 32)
+    logits, cache = model.prefill(params, {"tokens": prompt[None]}, cache)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    return tok, cache
+
+
+def _decode_run(model, params, tok, cache, n):
+    toks = []
+    for _ in range(n):
+        logits, cache = model.decode_step(params, tok, cache)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        toks.append(int(tok[0, 0]))
+    return toks, tok, cache
+
+
+def _check_swap_mid_generation(swap_begin, chunks_per_step, delta_seed):
+    model, params_a, params_b = _params_pair(delta_seed)
+    prompt = jax.random.randint(jax.random.PRNGKey(delta_seed % 97),
+                                (5,), 0, TINY.vocab - 1).astype(jnp.int32)
+
+    # reference fingerprints of each checkpoint's full plane set
+    ref_a = CrossbarExecutor(TINY.xbar)
+    ref_a.program_params(params_a)
+    fp_a = ref_a.fingerprint()
+    ref_b = CrossbarExecutor(TINY.xbar)
+    ref_b.program_params(params_b)
+    fp_b = ref_b.fingerprint()
+    assert fp_a != fp_b
+
+    # -- hot-swapped generation -------------------------------------------
+    ex = model.executor
+    ex.program_params(params_a)
+    tok, cache = _prefill(model, params_a, prompt)
+    tok0 = tok
+    cur = params_a
+    hs = None
+    flip_at = None           # index of the first post-flip decode step
+    toks, fps = [], []
+    snap = (tok, cache)      # state entering the next decode step
+    for i in range(N_STEPS):
+        if i == swap_begin:
+            hs = HotSwapper(ex, params_b, chunks_per_step=chunks_per_step)
+        if hs is not None and not hs.promoted:
+            hs.step()        # shadow chunks program BETWEEN decode steps
+            if hs.done:
+                cur = hs.promote()
+                flip_at = i
+                snap_flip = snap
+        fps.append(ex.fingerprint())
+        logits, cache = model.decode_step(cur, tok, cache)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        toks.append(int(tok[0, 0]))
+        snap = (tok, cache)
+
+    # no mixed-plane reads: every decode step saw exactly one checkpoint's
+    # plane set, and the flip point separates them cleanly
+    assert set(fps) <= {fp_a, fp_b}
+    if flip_at is None:
+        assert fps == [fp_a] * N_STEPS
+    else:
+        assert fps == [fp_a] * flip_at + [fp_b] * (N_STEPS - flip_at)
+
+    # (a) pre-flip tokens are bit-exact with a pure params_a generation
+    model_a = build_model(TINY)
+    model_a.executor.program_params(params_a)
+    tok_a, cache_a = _prefill(model_a, params_a, prompt)
+    assert jnp.array_equal(tok_a, tok0)
+    toks_ref_a, _, _ = _decode_run(model_a, params_a, tok_a, cache_a,
+                                   N_STEPS)
+    pre = N_STEPS if flip_at is None else flip_at
+    assert toks[:pre] == toks_ref_a[:pre]
+
+    # (b) post-flip tokens are bit-exact with params_b continuing from the
+    # exact pre-flip state (cold executor programmed with params_b)
+    if flip_at is not None:
+        model_b = build_model(TINY)
+        model_b.executor.program_params(params_b)
+        tok_f, cache_f = snap_flip
+        toks_ref_b, _, _ = _decode_run(model_b, params_b, tok_f, cache_f,
+                                       N_STEPS - flip_at)
+        assert toks[flip_at:] == toks_ref_b
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @settings(max_examples=5, deadline=None)
+    @given(st.integers(0, 4), st.integers(5, 20),
+           st.integers(1, 2 ** 31 - 1))
+    def test_swap_mid_generation_is_bit_exact_with_no_mixed_plane_reads(
+            swap_begin, chunks_per_step, delta_seed):
+        _check_swap_mid_generation(swap_begin, chunks_per_step, delta_seed)
+else:
+    @pytest.mark.slow
+    @pytest.mark.parametrize("swap_begin,chunks_per_step,delta_seed", [
+        (0, 20, 1),        # instant flip before any pre-swap decode
+        (2, 5, 12345),     # multi-step overlap window
+        (4, 6, 999),       # late begin, promotion near the tail
+    ])
+    def test_swap_mid_generation_is_bit_exact_with_no_mixed_plane_reads(
+            swap_begin, chunks_per_step, delta_seed):
+        _check_swap_mid_generation(swap_begin, chunks_per_step, delta_seed)
