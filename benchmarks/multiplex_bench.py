@@ -1,0 +1,208 @@
+"""Multi-tenant plane-multiplexing benchmarks: two checkpoints served
+from the two tile planes of ONE executor vs two dedicated deployments.
+
+Three measurements, all on the CI smoke transformer:
+
+  * **fidelity** — both tenants' token streams from one multiplexed
+    executor must be bit-identical to two dedicated single-tenant
+    schedulers (same checkpoints, same prompts).
+  * **density** — the multiplexed deployment serves both checkpoints at
+    1.0x one deployment's physical memristor count (the stacked twin
+    planes that a single-tenant deploy leaves as idle write-shadows);
+    two dedicated arrays burn 2.0x.
+  * **availability** — a tenant-B hot-swap under tenant-A traffic: B's
+    planes reprogram in t_write-costed chunks between A's decode steps
+    (read-under-write re-purposed for multi-tenancy).  Zero A-requests
+    drop, A's stream is bit-identical to a swap-free run, and the
+    device-time throughput during the swap window sustains >= 2x the
+    stop-the-world policy.
+
+CLI: ``python benchmarks/multiplex_bench.py --json
+BENCH_multiplex_smoke.json`` (the CI bench-lane multiplex smoke; exits
+nonzero if an acceptance figure fails).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.engine import EngineConfig  # noqa: E402
+from repro.core.quant import QuantConfig  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.serve.engine import BatchScheduler, Request  # noqa: E402
+from repro.serve.hotswap import finetune_delta  # noqa: E402
+
+# the paper's operating point (10-bit reads vs 250 ns writes), matching
+# hotswap_bench.py so the two smokes are comparable
+_XBAR = EngineConfig(tile_rows=64, tile_cols=128, mode="deepnet",
+                     quant=QuantConfig(w_bits=4, in_bits=10, adc_bits=10))
+
+_N_SLOTS, _MAX_LEN = 2, 64
+
+
+def _crossbar_cfg():
+    return dataclasses.replace(get_config("qwen3_4b", smoke=True),
+                               backend="crossbar", xbar=_XBAR)
+
+
+def _prompt(rid, vocab):
+    return jax.random.randint(jax.random.PRNGKey(rid), (6,), 0,
+                              vocab - 1).astype(jnp.int32)
+
+
+def _submit(sched, model_id, rids, vocab, max_new):
+    for rid in rids:
+        sched.submit(Request(rid=rid, prompt=_prompt(rid, vocab),
+                             max_new=max_new, model_id=model_id))
+
+
+def _drain(sched, n_req, max_steps=500):
+    done, steps = [], 0
+    while len(done) < n_req and steps < max_steps:
+        done += sched.step()
+        steps += 1
+    return {r.rid: r.out for r in done}
+
+
+def bench_multiplex(quick: bool = False):
+    n_req, max_new = (2, 5) if quick else (3, 8)
+    cfg = _crossbar_cfg()
+    params_a = build_model(cfg).init(jax.random.PRNGKey(0))
+    params_b = finetune_delta(params_a, scale=0.04, seed=11)
+    rids_a, rids_b = range(n_req), range(100, 100 + n_req)
+
+    # -- dedicated pair: one executor (and its whole stack) per checkpoint --
+    t0 = time.perf_counter()
+    model_da = build_model(cfg)
+    sched_da = BatchScheduler(model_da, params_a, _N_SLOTS, _MAX_LEN)
+    _submit(sched_da, "A", rids_a, cfg.vocab, max_new)
+    out_da = _drain(sched_da, n_req)
+    model_db = build_model(cfg)
+    sched_db = BatchScheduler(model_db, params_b, _N_SLOTS, _MAX_LEN)
+    _submit(sched_db, "A", rids_b, cfg.vocab, max_new)
+    out_db = _drain(sched_db, n_req)
+    wall_dedicated = time.perf_counter() - t0
+    devices_dedicated = (model_da.executor.n_devices_physical
+                         + model_db.executor.n_devices_physical)
+
+    # -- multiplexed: both checkpoints resident in ONE executor's planes ----
+    t0 = time.perf_counter()
+    model_m = build_model(cfg)
+    sched_m = BatchScheduler(model_m, params_a, _N_SLOTS, _MAX_LEN,
+                             tenants={"A": params_a, "B": params_b})
+    _submit(sched_m, "A", rids_a, cfg.vocab, max_new)
+    _submit(sched_m, "B", rids_b, cfg.vocab, max_new)
+    out_m = _drain(sched_m, 2 * n_req)
+    wall_multiplexed = time.perf_counter() - t0
+    devices_mux = model_m.executor.n_devices_physical
+
+    streams_identical = (
+        all(out_m[r] == out_da[r] for r in rids_a)
+        and all(out_m[r] == out_db[r] for r in rids_b))
+    device_ratio = devices_dedicated / devices_mux
+
+    # -- tenant-B hot-swap under tenant-A traffic ---------------------------
+    params_b2 = finetune_delta(params_a, scale=0.07, seed=23)
+    # swap-free reference for tenant A's stream
+    model_r = build_model(cfg)
+    sched_r = BatchScheduler(model_r, params_a, _N_SLOTS, _MAX_LEN,
+                             tenants={"A": params_a, "B": params_b})
+    _submit(sched_r, "A", rids_a, cfg.vocab, 3 * max_new)
+    ref_a = _drain(sched_r, n_req)
+
+    model_s = build_model(cfg)
+    sched_s = BatchScheduler(model_s, params_a, _N_SLOTS, _MAX_LEN,
+                             tenants={"A": params_a, "B": params_b})
+    _submit(sched_s, "A", rids_a, cfg.vocab, 3 * max_new)
+    for _ in range(2):
+        sched_s.step()
+    hs = sched_s.begin_hot_swap(params_b2, chunks_per_step=1, tenant="B")
+    n_chunks = hs.plan.total_chunks
+    # pace the write window across several of A's decode steps
+    hs.chunks_per_step = max(1, -(-n_chunks // max(3 * max_new - 4, 1)))
+    t0 = time.perf_counter()
+    out_swap = _drain(sched_s, n_req)
+    wall_swap = time.perf_counter() - t0
+    rep = sched_s.swap_history[0]
+    a_streams_unperturbed = all(out_swap[r] == ref_a[r] for r in rids_a)
+    zero_dropped = (len(out_swap) == n_req
+                    and all(len(out_swap[r]) == 3 * max_new
+                            for r in rids_a))
+
+    out = {
+        "us_per_call": wall_multiplexed * 1e6,
+        "n_requests_per_tenant": n_req,
+        "max_new": max_new,
+        "wall_dedicated_pair_s": wall_dedicated,
+        "wall_multiplexed_s": wall_multiplexed,
+        "wall_b_swap_under_a_s": wall_swap,
+        "streams_bit_identical_to_dedicated": bool(streams_identical),
+        "devices_physical_dedicated_pair": devices_dedicated,
+        "devices_physical_multiplexed": devices_mux,
+        "device_count_ratio_dedicated_over_mux": device_ratio,
+        "tenants": model_m.executor.tenants,
+        "b_swap_n_chunks": n_chunks,
+        "b_swap_tenant": rep["tenant"],
+        "b_swap_zero_dropped_a_requests": bool(zero_dropped),
+        "b_swap_a_streams_unperturbed": bool(a_streams_unperturbed),
+        "b_swap_decode_steps_during": rep["decode_steps_during_swap"],
+    }
+    # device-time acceptance metrics for the swap window (Table-I model)
+    out.update({k: rep[k] for k in (
+        "device_decode_step_s", "device_write_total_s",
+        "tok_per_device_s_overlapped_during_swap",
+        "tok_per_device_s_stop_world_during_swap",
+        "throughput_ratio_overlap_vs_stop_world",
+        "sustains_2x_during_swap")})
+    return out
+
+
+def accepted(res) -> bool:
+    return (res["streams_bit_identical_to_dedicated"]
+            and res["device_count_ratio_dedicated_over_mux"] == 2.0
+            and res["b_swap_zero_dropped_a_requests"]
+            and res["b_swap_a_streams_unperturbed"]
+            and res["b_swap_decode_steps_during"] > 0
+            and res["sustains_2x_during_swap"])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_multiplex_smoke.json")
+    args = ap.parse_args(argv)
+    res = bench_multiplex(quick=True)
+    print("name,us_per_call,derived")
+    derived = {k: v for k, v in res.items() if k != "us_per_call"}
+    print(f"multiplex_plane_sharing,{res['us_per_call']:.1f},"
+          f"{json.dumps(derived, default=float)}")
+    from benchmarks.meta import append_trajectory, write_stamped
+    results = {"multiplex_plane_sharing": res}
+    meta = write_stamped(results, args.json, lane="multiplex-smoke")
+    append_trajectory(meta, results)
+    print(f"# wrote {args.json} (sha={meta['git_sha'][:12]})")
+    ok = accepted(res)
+    print(f"# acceptance: streams bit-identical "
+          f"{res['streams_bit_identical_to_dedicated']}, device ratio "
+          f"{res['device_count_ratio_dedicated_over_mux']:.1f}x dedicated "
+          f"vs 1.0x multiplexed, B-swap under A traffic dropped zero "
+          f"({res['b_swap_zero_dropped_a_requests']}) with A unperturbed "
+          f"({res['b_swap_a_streams_unperturbed']}), throughput-during-"
+          f"swap {res['throughput_ratio_overlap_vs_stop_world']:.2f}x "
+          f"stop-the-world (>=2x: {res['sustains_2x_during_swap']})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

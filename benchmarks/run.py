@@ -22,6 +22,7 @@ sys.path.insert(0, _ROOT)   # so ``python benchmarks/run.py`` also works
 
 from benchmarks import executor_bench as xb  # noqa: E402
 from benchmarks import hotswap_bench as hb  # noqa: E402
+from benchmarks import multiplex_bench as mb  # noqa: E402
 from benchmarks import paper_benches as pb  # noqa: E402
 from benchmarks.meta import append_trajectory, write_stamped  # noqa: E402
 
@@ -42,6 +43,7 @@ RESIDENCY_BENCHES = [
     ("executor_reference_vs_kernel", xb.bench_reference_vs_kernel),
     ("executor_decode_resident", xb.bench_executor_decode),
     ("hotswap_overlap", hb.bench_hotswap),
+    ("multiplex_plane_sharing", mb.bench_multiplex),
 ]
 
 
@@ -54,11 +56,12 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     results = {}
-    # --quick is CI's "Benchmark smoke" step, which is followed by a
-    # dedicated hotswap_bench.py run — skip hotswap there to avoid paying
-    # the same swap loop twice per CI run
+    # --quick is CI's "Benchmark smoke" step, which is followed by
+    # dedicated hotswap_bench.py / multiplex_bench.py runs — skip those
+    # here to avoid paying the same serving loops twice per CI run
     quick_benches = [(n, f) for n, f in RESIDENCY_BENCHES
-                     if n != "hotswap_overlap"]
+                     if n not in ("hotswap_overlap",
+                                  "multiplex_plane_sharing")]
     benches = ([(n, lambda f=f: f(quick=True)) for n, f in quick_benches]
                if args.quick else
                BENCHES + [(n, f) for n, f in RESIDENCY_BENCHES])

@@ -35,6 +35,19 @@ shadow planes in write-latency-costed chunks (:meth:`write_chunks`, meant
 to interleave with decode steps), and :meth:`promote` flips every pair
 atomically after verifying per-tile fingerprints — zero-downtime weight
 hot-swap, the paper's read-under-write overlap at the serving tier.
+
+Multi-tenant plane multiplexing (PR 3): the twin planes can instead hold
+a *second resident checkpoint*.  ``program_params(params, tenant="B")``
+deploys tenant B onto the twin slot of every pair, per-tenant
+fingerprints/versions address each checkpoint independently, and
+``linear(..., tenant=...)`` (or the ambient :meth:`read_tenant` scope a
+serving loop jits under) selects the plane per pair — two models served
+from ONE physical stack, the paper's user-reconfigurable plane pair as a
+serving-tier analogue of PUMA's many-workload fabric.
+``begin_swap(params, tenant="B")`` reprograms B's planes in t_write
+chunks while tenant A keeps decoding: the same read-under-write overlap,
+re-purposed for multi-tenancy (B's reads pause for the write window; the
+new planes land atomically at :meth:`promote`).
 """
 from __future__ import annotations
 
@@ -88,19 +101,56 @@ class CrossbarExecutor:
     """Programs a model's linear weights onto crossbar tiles exactly once
     and serves all subsequent ``x @ W`` reads from the resident tiles."""
 
+    #: the two plane slots bound the tenant population
+    TENANTS = ("A", "B")
+
     def __init__(self, cfg: EngineConfig = EngineConfig(mode="deepnet")):
         self.cfg = cfg
         self._cache: Dict[str, PlanePair] = {}
         self._n_in: Dict[str, int] = {}
-        # the leaf arrays the tiles were programmed from: resident
-        # conductances are physical state, so serving a DIFFERENT tree
-        # through them must be an error, not silent reuse.  Strong refs —
-        # identity comparison stays sound (no id() reuse after GC).
-        self._programmed_leaves: Optional[Tuple[Any, ...]] = None
+        # per tenant, the leaf arrays its planes were programmed from:
+        # resident conductances are physical state, so serving a DIFFERENT
+        # tree through them must be an error, not silent reuse.  Strong
+        # refs — identity comparison stays sound (no id() reuse after GC).
+        self._programmed_leaves: Dict[str, Tuple[Any, ...]] = {}
         self._swap: Optional[SwapPlan] = None
-        self._version = 0
+        self._versions: Dict[str, int] = {}
+        # ambient tenant for linear()/fingerprint()/ensure_programmed()
+        # when no explicit tenant is passed — trace-time Python state, set
+        # by read_tenant() around a serving closure's trace
+        self._read_tenant: str = "A"
         self.stats = {"programmed": 0, "cache_hits": 0, "program_walks": 0,
                       "swaps": 0, "swap_chunks": 0}
+
+    # -- tenant addressing ----------------------------------------------------
+
+    def _check_tenant(self, tenant: str) -> str:
+        if tenant not in self.TENANTS:
+            raise ValueError(
+                f"unknown tenant {tenant!r}: a stacked pair holds exactly "
+                f"two plane sets, tenants {self.TENANTS}")
+        return tenant
+
+    def _resolve_tenant(self, tenant: Optional[str]) -> str:
+        return self._check_tenant(tenant or self._read_tenant)
+
+    @contextlib.contextmanager
+    def read_tenant(self, tenant: str):
+        """Ambient-tenant scope: reads (and eager programming checks)
+        inside the block address ``tenant``'s plane set.  Wrap a serving
+        closure's trace in this so the jitted step reads that tenant's
+        tiles as its trace constants."""
+        self._check_tenant(tenant)
+        prev, self._read_tenant = self._read_tenant, tenant
+        try:
+            yield self
+        finally:
+            self._read_tenant = prev
+
+    @property
+    def tenants(self) -> List[str]:
+        """Resident tenants (those with a programmed plane set)."""
+        return sorted(self._programmed_leaves)
 
     # -- programming (the write path; once per deployment) -----------------
 
@@ -122,92 +172,135 @@ class CrossbarExecutor:
                 out.append((".".join(parts), w, n_in))
         return out
 
-    def program_params(self, params: Any) -> int:
-        """Program every eligible linear weight in ``params``; idempotent.
+    def program_params(self, params: Any, tenant: Optional[str] = None
+                       ) -> int:
+        """Program every eligible linear weight in ``params`` onto the
+        named tenant's plane set; idempotent per tenant.
 
-        Returns the number of weights *newly* programmed this walk; weights
-        already resident count as ``stats['cache_hits']`` instead.
+        Tenant "A" (the default) programs the read-active planes; tenant
+        "B" deploys a second resident checkpoint onto the twin planes —
+        the pairs then multiplex two models from one physical stack.
+        Returns the number of weights *newly* programmed this walk;
+        weights already resident count as ``stats['cache_hits']``.
         """
+        tenant = self._resolve_tenant(tenant)
+        if self._swap is not None and tenant not in self._programmed_leaves:
+            # a first-time tenant claims the twin slots — the very planes
+            # an in-flight tenant-A swap will flip at promote(); admitting
+            # it here would make that promotion fail half-applied
+            raise RuntimeError(
+                f"cannot deploy new tenant {tenant!r} while a hot-swap is "
+                f"in flight (the twin planes are the swap's write "
+                f"target); promote() or abort_swap() first")
         leaves = jax.tree_util.tree_flatten_with_path(params)[0]
         if any(isinstance(w, jax.core.Tracer) for _, w in leaves):
             raise TypeError(
                 "CrossbarExecutor.program_params needs concrete arrays; "
                 "program at load time, before entering jit")
         tree = tuple(w for _, w in leaves)
-        if self._programmed_leaves is None:
-            self._programmed_leaves = tree
-        elif not self._same_tree(tree):
+        if tenant not in self._programmed_leaves:
+            self._programmed_leaves[tenant] = tree
+        elif not self._same_tree(tree, tenant):
             raise RuntimeError(
-                "crossbar tiles are already programmed from a different "
-                "params tree; resident weights are physical state — use "
-                "swap(params) / begin_swap(params) for a zero-downtime "
-                "hot-swap onto the shadow planes")
+                f"tenant {tenant!r} planes are already programmed from a "
+                f"different params tree; resident weights are physical "
+                f"state — use swap(params, tenant={tenant!r}) / "
+                f"begin_swap(params, tenant={tenant!r}) for a "
+                f"zero-downtime reprogram")
         self.stats["program_walks"] += 1
         new = 0
         for name, w, n_in in self._eligible(leaves):
-            new += self._program_one(name, w, n_in)
+            new += self._program_one(name, w, n_in, tenant)
         if new:
-            self._version += 1
+            self._versions[tenant] = self._versions.get(tenant, 0) + 1
         return new
 
-    def _program_one(self, name: str, w: jax.Array, n_in: int) -> int:
-        if name in self._cache:
+    def _program_one(self, name: str, w: jax.Array, n_in: int,
+                     tenant: str) -> int:
+        pair = self._cache.get(name)
+        if pair is not None and pair.has_tenant(tenant):
             self.stats["cache_hits"] += 1
             return 0
         k = math.prod(w.shape[:n_in])
         w2d = jnp.asarray(w, jnp.float32).reshape(k, -1)
-        self._cache[name] = PlanePair(
-            name, plane_a=engine.program(w2d, self.cfg),
-            fp_a=planes.fingerprint_weight(w2d))
-        self._n_in[name] = n_in
+        if pair is None:
+            pair = self._cache[name] = PlanePair(name)
+            self._n_in[name] = n_in
+        else:
+            ref = pair.any_plane
+            if (w2d.shape[0], w2d.shape[1]) != (ref.k, ref.n):
+                raise ValueError(
+                    f"{name}: tenant {tenant!r} weight shape "
+                    f"{w2d.shape} != the pair's tile geometry "
+                    f"{(ref.k, ref.n)}; tenants share physical stacks")
+        pair.assign(tenant, engine.program(w2d, self.cfg),
+                    planes.fingerprint_weight(w2d))
         self.stats["programmed"] += 1
         return 1
 
-    def _same_tree(self, leaves: Tuple[Any, ...]) -> bool:
-        prog = self._programmed_leaves
+    def _same_tree(self, leaves: Tuple[Any, ...], tenant: str) -> bool:
+        prog = self._programmed_leaves.get(tenant)
         return (prog is not None and len(prog) == len(leaves)
                 and all(a is b for a, b in zip(prog, leaves)))
 
-    def ensure_programmed(self, params: Any) -> None:
+    def ensure_programmed(self, params: Any,
+                          tenant: Optional[str] = None) -> None:
         """Program on the first eager call; afterwards verify the caller is
-        serving the SAME params tree the tiles were programmed from.
+        serving the SAME params tree the tenant's tiles were programmed
+        from.
 
         Under jit the leaves are tracers and identity CANNOT be verified —
         a caller who programs tree A eagerly and then jit-calls with tree B
         gets tree A's tiles.  The supported flow (BatchScheduler / the
         model's eager entry points) always passes through an eager call,
-        where the check is sound.
+        where the check is sound.  The tenant defaults to the ambient
+        :meth:`read_tenant` scope, so a lane closure jitted under
+        ``read_tenant("B")`` checks (and first-programs) tenant B.
         """
+        tenant = self._resolve_tenant(tenant)
         leaves = jax.tree_util.tree_leaves(params)
         if any(isinstance(w, jax.core.Tracer) for w in leaves):
-            if not self._cache:
+            if tenant not in self._programmed_leaves:
                 raise RuntimeError(
-                    "crossbar weights are not programmed and params are "
-                    "tracers; call model.executor.program_params(params) "
-                    "eagerly before jitting the serving step")
+                    f"tenant {tenant!r} crossbar weights are not "
+                    f"programmed and params are tracers; call "
+                    f"model.executor.program_params(params, "
+                    f"tenant={tenant!r}) eagerly before jitting the "
+                    f"serving step")
             return  # tracers: identity unverifiable here (see docstring)
-        if self._same_tree(tuple(leaves)):
+        if self._same_tree(tuple(leaves), tenant):
             return
         # unseen tree: program it (first call), or raise (different tree /
         # a tree extending a manually-programmed subset) via program_params
-        self.program_params(params)
+        self.program_params(params, tenant)
 
     # -- read path ----------------------------------------------------------
 
     def has(self, name: str) -> bool:
         return name in self._cache
 
-    def linear(self, x: jax.Array, w: jax.Array, name: str) -> jax.Array:
+    def linear(self, x: jax.Array, w: jax.Array, name: str,
+               tenant: Optional[str] = None) -> jax.Array:
         """Resident-tile execution of ``x @ W`` for the named weight.
 
         ``w`` is only consulted for its (static) shape — the arithmetic
-        reads the read-active plane of the named pair.  While a hot-swap
-        is in flight and ``cfg.swap_leakage`` is set, reads carry the
-        write plane's subthreshold leakage (a trace-time constant: the
-        overlay applies to eager / freshly traced reads, not to an
-        already-compiled serving step).
+        reads the named tenant's plane of the pair (default: the ambient
+        :meth:`read_tenant` scope, i.e. tenant "A" unless a serving lane
+        set otherwise).  While a hot-swap is in flight and
+        ``cfg.swap_leakage`` is set, reads carry the write plane's
+        subthreshold leakage (a trace-time constant: the overlay applies
+        to eager / freshly traced reads, not to an already-compiled
+        serving step).  Reads of a tenant whose own planes are mid-write
+        (an in-place tenant swap) are refused — those wordlines are
+        driving write pulses, not read pulses.
         """
-        pw = self._cache[name].active
+        tenant = self._resolve_tenant(tenant)
+        if (self._swap is not None and self._swap.in_place
+                and self._swap.tenant == tenant):
+            raise RuntimeError(
+                f"tenant {tenant!r} planes are mid-write (in-place swap "
+                f"in flight); reads resume after promote()")
+        pw = self._cache[name].active_for(tenant)
         n_in = self._n_in[name]
         lead = x.shape[:-n_in]
         k = math.prod(x.shape[-n_in:])
@@ -221,35 +314,45 @@ class CrossbarExecutor:
 
     # -- fingerprints / versioning -------------------------------------------
 
-    def fingerprint(self, name: Optional[str] = None) -> str:
-        """Digest of the source weights the read-active plane(s) were
+    def fingerprint(self, name: Optional[str] = None,
+                    tenant: Optional[str] = None) -> str:
+        """Digest of the source weights the named tenant's plane(s) were
         programmed (and write-verified) from — checkpoint-content
         addressing, not a raw cell-code hash (``planes.fingerprint_tiles``
         is the tile-state digest write-verify uses).
 
-        With ``name``: the per-tile fingerprint of that weight's active
-        plane.  Without: a combined digest over all resident tiles (sorted
-        by name) — two executors serving identical weights agree, and any
+        With ``name``: the per-tile fingerprint of that weight's plane.
+        Without: a combined digest over all resident tiles (sorted by
+        name) — two executors serving identical weights agree, and any
         mixed-plane state mid-promotion would produce a digest matching
         neither checkpoint (asserted by the overlap property test).
+        Tenant defaults to the ambient :meth:`read_tenant` scope.
         """
+        tenant = self._resolve_tenant(tenant)
         if name is not None:
-            return self._cache[name].fingerprint
+            return self._cache[name].fingerprint_for(tenant)
         h = hashlib.blake2b(digest_size=8)
         for n in sorted(self._cache):
             h.update(n.encode())
-            h.update(self._cache[n].fingerprint.encode())
+            h.update(self._cache[n].fingerprint_for(tenant).encode())
         return h.hexdigest()
 
-    def fingerprints(self) -> Dict[str, str]:
-        """Per-tile fingerprints of every read-active plane."""
-        return {n: p.fingerprint for n, p in sorted(self._cache.items())}
+    def fingerprints(self, tenant: Optional[str] = None) -> Dict[str, str]:
+        """Per-tile fingerprints of the named tenant's plane set."""
+        tenant = self._resolve_tenant(tenant)
+        return {n: p.fingerprint_for(tenant)
+                for n, p in sorted(self._cache.items())}
+
+    def version(self, tenant: str = "A") -> int:
+        """Per-tenant monotone deploy counter: 0 = unprogrammed; +1 per
+        initial program walk that wrote tiles; +1 per promoted swap."""
+        return self._versions.get(self._check_tenant(tenant), 0)
 
     @property
     def programmed_version(self) -> int:
-        """Monotone deploy counter: 0 = unprogrammed; +1 per initial
-        program walk that wrote tiles; +1 per promoted hot-swap."""
-        return self._version
+        """Tenant A's deploy counter (the pre-multiplex quantity, kept so
+        existing dashboards stay comparable); see :meth:`version`."""
+        return self.version("A")
 
     # -- deep-net hot-swap (write the shadow planes, then flip) --------------
 
@@ -257,8 +360,16 @@ class CrossbarExecutor:
     def swap_in_flight(self) -> bool:
         return self._swap is not None
 
-    def begin_swap(self, params: Any) -> SwapPlan:
-        """Stage ``params`` for programming onto the shadow planes.
+    def begin_swap(self, params: Any, tenant: str = "A") -> SwapPlan:
+        """Stage ``params`` for chunked programming of a plane set.
+
+        ``tenant="A"`` (the default) is the classic shadow swap: the
+        free twin planes are written and an atomic flip promotes them.
+        ``tenant="B"`` targets the twin slot directly — either a live
+        deploy of a second resident checkpoint or an in-place reprogram
+        of tenant B's planes while tenant A keeps serving (the paper's
+        read-under-write overlap re-purposed for multi-tenancy; B's own
+        reads pause until :meth:`promote`).
 
         The incoming tree must carry exactly the resident tile set with
         matching shapes (a new checkpoint, fine-tuned delta, or
@@ -266,12 +377,22 @@ class CrossbarExecutor:
         Returns the chunk work-list; drive it with :meth:`write_chunks`
         and finish with :meth:`promote`.
         """
+        self._check_tenant(tenant)
         if not self._cache:
             raise RuntimeError("nothing programmed; call program_params "
                                "before begin_swap")
         if self._swap is not None:
             raise RuntimeError("a hot-swap is already in flight; promote() "
                                "or abort_swap() first")
+        if tenant == "A":
+            occupied = sorted({p.twin_tenant for p in self._cache.values()
+                               if p.twin_resident})
+            if occupied:
+                raise RuntimeError(
+                    f"tenant 'A' has no free write plane: the twin slot "
+                    f"holds tenant(s) {occupied}; swap that tenant "
+                    f"(begin_swap(..., tenant={occupied[0]!r})) or "
+                    f"evict_tenant() first")
         leaves = jax.tree_util.tree_flatten_with_path(params)[0]
         if any(isinstance(w, jax.core.Tracer) for _, w in leaves):
             raise TypeError("begin_swap needs concrete arrays (eager, "
@@ -282,7 +403,7 @@ class CrossbarExecutor:
                 raise ValueError(
                     f"swap tree carries {name!r} which has no resident "
                     f"tiles; hot-swap reprograms existing planes only")
-            pw = self._cache[name].active
+            pw = self._cache[name].any_plane
             k = math.prod(w.shape[:n_in])
             w2d = jnp.asarray(w, jnp.float32).reshape(k, -1)
             if (k, w2d.shape[1]) != (pw.k, pw.n):
@@ -294,7 +415,8 @@ class CrossbarExecutor:
         if missing:
             raise ValueError(
                 f"swap tree is missing resident tiles: {sorted(missing)}")
-        self._swap = SwapPlan(programs, tuple(w for _, w in leaves), params)
+        self._swap = SwapPlan(programs, tuple(w for _, w in leaves), params,
+                              tenant=tenant, in_place=(tenant != "A"))
         return self._swap
 
     def write_chunks(self, n: int = 1) -> int:
@@ -313,19 +435,22 @@ class CrossbarExecutor:
                 # write-verify against an independent one-shot programming
                 # (paced here, inside the overlap window — not at the flip)
                 finished.verify(staged)
-                self._cache[finished.name].stage(staged, finished.fp)
+                self._swap.staged[finished.name] = (staged, finished.fp)
         return self._swap.remaining
 
     def promote(self) -> Any:
-        """Atomically flip every plane pair to the freshly written shadow.
+        """Atomically land the freshly written plane set.
 
         Every staged plane was already write-verified against an
         independent one-shot programming when its last chunk landed
         (``ChunkedProgram.verify``); this gate checks completeness and
-        ownership — every tile must hold a shadow staged by THIS plan,
-        not a stale or foreign one — before any pair flips, so a read can
-        never observe a mixed-plane state.  Returns the promoted params
-        tree (the caller serves embeddings/norms from it).
+        ownership — every tile must have been staged by THIS plan, not a
+        stale or foreign one — before any pair changes, so a read can
+        never observe a mixed-plane state.  A tenant-"A" plan flips every
+        pair to its shadow; an in-place tenant plan rewrites that
+        tenant's own slot (and un-pauses its reads).  Returns the
+        promoted params tree (the caller serves embeddings/norms from
+        it).
         """
         plan = self._swap
         if plan is None:
@@ -334,43 +459,67 @@ class CrossbarExecutor:
             raise RuntimeError(
                 f"swap not complete: {plan.remaining} chunks unwritten")
         for name, fp in plan.expected_fingerprints.items():
-            staged = self._cache[name].shadow_fingerprint
-            if staged != fp:
+            got = plan.staged.get(name)
+            if got is None or got[1] != fp:
                 raise RuntimeError(
-                    f"{name}: staged shadow fingerprint {staged} != "
-                    f"checkpoint {fp}; refusing to promote")
+                    f"{name}: staged plane fingerprint "
+                    f"{got[1] if got else None} != checkpoint {fp}; "
+                    f"refusing to promote")
         for cp in plan.programs:
-            self._cache[cp.name].flip()
-        self._programmed_leaves = plan.leaves
-        self._version += 1
+            pair = self._cache[cp.name]
+            pw, fp = plan.staged[cp.name]
+            if plan.in_place:
+                pair.assign(plan.tenant, pw, fp)
+            else:
+                pair.stage(pw, fp)
+                pair.flip()
+        self._programmed_leaves[plan.tenant] = plan.leaves
+        self._versions[plan.tenant] = self._versions.get(plan.tenant, 0) + 1
         self.stats["swaps"] += 1
         self._swap = None
         return plan.params
 
     def abort_swap(self) -> None:
-        """Drop an in-flight swap; staged shadow planes are cleared and the
-        read-active planes keep serving."""
-        if self._swap is None:
-            return
-        for cp in self._swap.programs:
-            self._cache[cp.name].drop_shadow()
+        """Drop an in-flight swap; every tenant's resident planes keep
+        serving (written-and-verified planes are buffered in the plan and
+        never touch a pair before promote, so abort is pure discard)."""
         self._swap = None
 
-    def swap(self, params: Any, chunk_burst: int = 64) -> Dict[str, Any]:
+    def swap(self, params: Any, chunk_burst: int = 64,
+             tenant: str = "A") -> Dict[str, Any]:
         """Blocking convenience swap: stage, write every chunk, promote.
 
         The overlapped serving path (serve/hotswap.py) interleaves
         ``write_chunks`` with decode steps instead; this is the
         stop-the-world comparison point and the API for offline reloads.
         """
-        plan = self.begin_swap(params)
+        plan = self.begin_swap(params, tenant=tenant)
         while not plan.done:
             self.write_chunks(chunk_burst)
         self.promote()
         return {"n_tiles": len(plan.programs),
                 "n_chunks": plan.total_chunks,
+                "tenant": tenant,
                 "device_write_s": plan.device_write_time(),
-                "programmed_version": self._version}
+                "programmed_version": self.version(tenant)}
+
+    def evict_tenant(self, tenant: str) -> None:
+        """Clear a twin-resident tenant; its slot reverts to a free
+        write-shadow (tenant "A" anchors the pairs and cannot be
+        evicted — reprogram it via swap instead)."""
+        self._check_tenant(tenant)
+        if tenant == "A":
+            raise ValueError("tenant 'A' anchors the plane pairs; "
+                             "swap(params) to replace its weights")
+        if self._swap is not None and self._swap.tenant == tenant:
+            raise RuntimeError(f"tenant {tenant!r} has a swap in flight; "
+                               f"promote() or abort_swap() first")
+        if tenant not in self._programmed_leaves:
+            return
+        for pair in self._cache.values():
+            if pair.twin_tenant == tenant:
+                pair.clear_twin(tenant)
+        del self._programmed_leaves[tenant]
 
     # -- bookkeeping ---------------------------------------------------------
 

@@ -63,9 +63,6 @@ def _assemble_planar(g: jax.Array, v_in: jax.Array, g_w: float):
     ii, jj = ii.ravel(), jj.ravel()
     gg = g.ravel()
 
-    def add(A, r, c, val):
-        return A.at[r, c].add(val)
-
     # device branches: row node <-> column node
     r_, c_ = ridx(ii, jj), cidx(ii, jj)
     A = A.at[r_, r_].add(gg)
@@ -74,7 +71,6 @@ def _assemble_planar(g: jax.Array, v_in: jax.Array, g_w: float):
     A = A.at[c_, r_].add(-gg)
 
     # row wire segments: (i, j) <-> (i, j+1), plus source at j = 0
-    seg = ii * 0 + 1  # all segments present where j+1 < m
     mask = jj < m - 1
     r0, r1 = ridx(ii, jj), ridx(ii, jnp.minimum(jj + 1, m - 1))
     gmask = jnp.where(mask, g_w, 0.0)
@@ -107,7 +103,7 @@ def _assemble_planar(g: jax.Array, v_in: jax.Array, g_w: float):
 @partial(jax.jit, static_argnames=("r_access",))
 def solve_planar(g_dev: jax.Array, v_in: jax.Array,
                  r_wire: float = PAPER.r_wire,
-                 r_access: float = None):
+                 r_access: float | None = None):
     """Exact nodal solve of an n x m planar crossbar.
 
     Returns (i_out, v_row, v_col): per-column sense currents (m,) and the
@@ -130,7 +126,7 @@ def solve_planar(g_dev: jax.Array, v_in: jax.Array,
 def solve_crossstack(g_top: jax.Array, g_bot: jax.Array,
                      v_in_top: jax.Array, v_in_bot: jax.Array,
                      r_wire: float = PAPER.r_wire,
-                     r_access: float = None):
+                     r_access: float | None = None):
     """Exact nodal solve of a CrossStack pair (expansion mode).
 
     Two r x m planes share the column nodes: device (p, i, j) connects row

@@ -69,7 +69,19 @@ class PlanePair:
 
     Mirrors ``modes.StackState`` (g_top, g_bot, read_top) with whole
     ``ProgrammedLinear`` grids in place of conductance matrices.  The
-    shadow slot is ``None`` until a hot-swap stages new weights into it.
+    twin slot plays one of two roles:
+
+      * **write-shadow** (``twin_tenant is None``) — empty until a
+        hot-swap stages new weights into it; an RE flip then promotes it
+        (single-tenant deep-net serving, PR 2).
+      * **second tenant** (``twin_tenant = "B"``) — a *resident* second
+        checkpoint served concurrently from the same stack: tenant "A"
+        reads one plane, tenant "B" the other, and the pair multiplexes
+        two models onto one physical device count (the paper's
+        user-re-purposable stack, §III, applied to multi-model serving).
+
+    Tenant "A" always addresses the ``read_a``-selected slot (so classic
+    shadow flips keep working); any other tenant owns the complement.
     """
     name: str
     plane_a: Optional[ProgrammedLinear] = None
@@ -77,6 +89,7 @@ class PlanePair:
     read_a: bool = True
     fp_a: Optional[str] = None
     fp_b: Optional[str] = None
+    twin_tenant: Optional[str] = None
 
     @property
     def active(self) -> ProgrammedLinear:
@@ -100,20 +113,98 @@ class PlanePair:
     def shadow_fingerprint(self) -> Optional[str]:
         return self.fp_b if self.read_a else self.fp_a
 
+    # -- tenant addressing ---------------------------------------------------
+
+    @property
+    def twin_resident(self) -> bool:
+        return self.twin_tenant is not None
+
+    def _tenant_reads_a(self, tenant: str) -> bool:
+        """Which physical slot the named tenant reads."""
+        if tenant == "A":
+            return self.read_a
+        if self.twin_tenant != tenant:
+            raise RuntimeError(
+                f"{self.name}: tenant {tenant!r} is not resident on the "
+                f"twin plane (twin holds {self.twin_tenant!r})")
+        return not self.read_a
+
+    def has_tenant(self, tenant: str) -> bool:
+        if tenant == "A":
+            return (self.plane_a if self.read_a else self.plane_b) is not None
+        return self.twin_tenant == tenant
+
+    def active_for(self, tenant: str = "A") -> ProgrammedLinear:
+        pw = (self.plane_a if self._tenant_reads_a(tenant)
+              else self.plane_b)
+        if pw is None:
+            raise RuntimeError(
+                f"{self.name}: tenant {tenant!r} plane unprogrammed")
+        return pw
+
+    def fingerprint_for(self, tenant: str = "A") -> str:
+        fp = self.fp_a if self._tenant_reads_a(tenant) else self.fp_b
+        if fp is None:
+            raise RuntimeError(
+                f"{self.name}: tenant {tenant!r} plane unprogrammed")
+        return fp
+
+    def assign(self, tenant: str, pw: ProgrammedLinear, fp: str) -> None:
+        """Program ``pw`` as the named tenant's resident plane.
+
+        Tenant "A" writes the read-active slot; any other tenant claims
+        (or rewrites) the twin slot, evicting the write-shadow role.
+        """
+        if tenant == "A":
+            reads_a = self.read_a
+        else:
+            if self.twin_tenant not in (None, tenant):
+                raise RuntimeError(
+                    f"{self.name}: twin plane already holds tenant "
+                    f"{self.twin_tenant!r}")
+            self.twin_tenant = tenant
+            reads_a = not self.read_a
+        if reads_a:
+            self.plane_a, self.fp_a = pw, fp
+        else:
+            self.plane_b, self.fp_b = pw, fp
+
+    def clear_twin(self, tenant: str) -> None:
+        """Evict the twin tenant; its slot reverts to an empty shadow."""
+        if self.twin_tenant != tenant:
+            raise RuntimeError(
+                f"{self.name}: twin plane holds {self.twin_tenant!r}, "
+                f"not {tenant!r}")
+        self.twin_tenant = None
+        self.drop_shadow()
+
+    @property
+    def any_plane(self) -> ProgrammedLinear:
+        """Either programmed plane — the shape/tile-geometry reference."""
+        pw = self.plane_a if self.plane_a is not None else self.plane_b
+        if pw is None:
+            raise RuntimeError(f"{self.name}: no plane programmed")
+        return pw
+
     @property
     def n_devices(self) -> int:
         """Memristors holding the weights being SERVED (the read-active
         plane) — comparable across deploys and with the pre-plane-pair
         counts.  The stacked twin doubles the physical device count
-        (:attr:`n_devices_physical`) whether or not it is programmed."""
-        return self.active.n_devices
+        (:attr:`n_devices_physical`) whether or not it is programmed;
+        both planes share one tile geometry, so either is the count."""
+        return self.any_plane.n_devices
 
     @property
     def n_devices_physical(self) -> int:
-        return 2 * self.active.n_devices
+        return 2 * self.any_plane.n_devices
 
     def stage(self, pw: ProgrammedLinear, fp: str) -> None:
         """Write ``pw`` into the shadow plane (RE low: column-isolated)."""
+        if self.twin_resident:
+            raise RuntimeError(
+                f"{self.name}: no free shadow plane — the twin holds "
+                f"tenant {self.twin_tenant!r}; swap or evict that tenant")
         if self.read_a:
             self.plane_b, self.fp_b = pw, fp
         else:
@@ -121,6 +212,10 @@ class PlanePair:
 
     def flip(self) -> None:
         """Promote the shadow plane (the RE swap of ``modes.deepnet_swap``)."""
+        if self.twin_resident:
+            raise RuntimeError(
+                f"{self.name}: cannot flip — the twin plane holds tenant "
+                f"{self.twin_tenant!r}, not a staged shadow")
         if self.shadow is None:
             raise RuntimeError(f"{self.name}: no staged shadow plane to "
                                f"promote")
@@ -227,12 +322,25 @@ class SwapPlan:
     One write port: chunks serialize across all tiles, so total device
     time is ``total_chunks * t_write`` — the quantity the overlapped
     schedule hides under the read stream.
+
+    ``tenant`` names the plane set being deployed.  The default "A" is
+    the classic shadow swap (stage the free twin, flip at promotion);
+    ``in_place`` marks a tenant-targeted swap that rewrites that
+    tenant's own resident slot — its reads pause for the swap window
+    while the *other* tenant keeps serving (read-under-write re-purposed
+    for multi-tenancy).  Fully written-and-verified planes are buffered
+    in ``staged`` and land on the pairs only at promotion, so no read —
+    either tenant's — can ever observe a partially deployed checkpoint.
     """
     programs: List[ChunkedProgram]
     leaves: Tuple[Any, ...]        # incoming tree leaves (identity check)
     params: Any                    # the incoming tree itself
     cursor: int = 0
     chunks_done: int = 0
+    tenant: str = "A"
+    in_place: bool = False
+    staged: Dict[str, Tuple[ProgrammedLinear, str]] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def total_chunks(self) -> int:

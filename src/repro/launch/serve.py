@@ -13,8 +13,16 @@ every decode step is a read-only bit-serial MAC (core/executor.py).
 program onto the write-shadow planes between decode steps and an atomic
 flip promotes them with zero dropped requests.  SPEC is ``ft:<scale>``
 (the serving params plus a scaled fine-tune delta), ``seed:<int>`` (a
-fresh init — e.g. a recalibration sweep), or a checkpoint directory
-written by checkpoint/manager.py.
+fresh init — e.g. a recalibration sweep), a checkpoint directory
+written by checkpoint/manager.py, or ``init`` (the serving params).
+
+``--multiplex SPECA,SPECB`` serves TWO checkpoints from the two tile
+planes of one crossbar executor (multi-tenant plane multiplexing):
+requests alternate between tenants A and B, each tenant decodes from its
+own resident plane set, and the physical device count is 1.0x a single
+deployment's stacks instead of the 2.0x two dedicated arrays would
+burn.  Combined with ``--hot-swap``, the swap targets tenant B: its
+planes reprogram under tenant A's uninterrupted traffic.
 """
 from __future__ import annotations
 
@@ -32,7 +40,9 @@ from repro.serve.engine import BatchScheduler, Request, greedy_generate
 
 
 def resolve_swap_params(spec: str, model, params):
-    """Second-checkpoint resolution for ``--hot-swap``."""
+    """Checkpoint-spec resolution for ``--hot-swap`` / ``--multiplex``."""
+    if spec == "init":
+        return params
     if spec.startswith("seed:"):
         try:
             seed = int(spec[5:])
@@ -50,7 +60,8 @@ def resolve_swap_params(spec: str, model, params):
         from repro.checkpoint.manager import CheckpointManager
         return CheckpointManager(spec).restore(target=params)
     raise SystemExit(f"--hot-swap: unknown spec {spec!r} "
-                     f"(want ft:<scale>, seed:<int>, or a checkpoint dir)")
+                     f"(want init, ft:<scale>, seed:<int>, or a "
+                     f"checkpoint dir)")
 
 
 def main(argv=None):
@@ -68,7 +79,12 @@ def main(argv=None):
     ap.add_argument("--hot-swap", default=None, metavar="SPEC",
                     help="second checkpoint to deploy mid-serving "
                          "(ft:<scale> | seed:<int> | checkpoint dir); "
-                         "requires --backend crossbar")
+                         "requires --backend crossbar; under --multiplex "
+                         "the swap targets tenant B")
+    ap.add_argument("--multiplex", default=None, metavar="SPECA,SPECB",
+                    help="serve two checkpoints A,B from the two tile "
+                         "planes of one executor (specs as in --hot-swap, "
+                         "plus 'init'); requires --backend crossbar")
     ap.add_argument("--swap-after", type=int, default=None,
                     help="begin the swap once this many requests finished "
                          "(default: half)")
@@ -77,6 +93,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.hot_swap and args.backend != "crossbar":
         raise SystemExit("--hot-swap requires --backend crossbar")
+    if args.multiplex and args.backend != "crossbar":
+        raise SystemExit("--multiplex requires --backend crossbar")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if cfg.family in ("encdec", "vlm", "rwkv6", "zamba2"):
@@ -86,23 +104,38 @@ def main(argv=None):
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
+    tenants = None
+    if args.multiplex:
+        try:
+            spec_a, spec_b = args.multiplex.split(",", 1)
+        except ValueError:
+            raise SystemExit("--multiplex wants two comma-separated specs, "
+                             "e.g. init,ft:0.02")
+        tenants = {"A": resolve_swap_params(spec_a, model, params),
+                   "B": resolve_swap_params(spec_b, model, params)}
+        params = tenants["A"]
     sched = BatchScheduler(model, params, n_slots=args.slots,
-                           max_len=args.max_len)
+                           max_len=args.max_len, tenants=tenants)
     if model.executor is not None:
         ex = model.executor
         print(f"crossbar backend: {ex.n_resident} resident weight grids, "
-              f"{ex.n_devices} programmed devices "
-              f"(programmed={ex.stats['programmed']}, "
+              f"{ex.n_devices} programmed devices, tenants={ex.tenants} "
+              f"({ex.n_devices_physical} physical incl. twin planes; "
+              f"programmed={ex.stats['programmed']}, "
               f"cache_hits={ex.stats['cache_hits']})")
     key = jax.random.PRNGKey(1)
     for rid in range(args.requests):
         key, k = jax.random.split(key)
         prompt = jax.random.randint(k, (args.prompt_len,), 0,
                                     cfg.vocab - 1).astype(jnp.int32)
-        sched.submit(Request(rid=rid, prompt=prompt, max_new=args.max_new))
+        # multiplexed serving alternates the two tenants' token streams
+        model_id = "B" if (tenants and rid % 2) else "A"
+        sched.submit(Request(rid=rid, prompt=prompt, max_new=args.max_new,
+                             model_id=model_id))
 
     swap_after = (args.swap_after if args.swap_after is not None
                   else args.requests // 2)
+    swap_tenant = "B" if tenants else "A"
     swap_params = (resolve_swap_params(args.hot_swap, model, params)
                    if args.hot_swap else None)
 
@@ -112,10 +145,11 @@ def main(argv=None):
         if (swap_params is not None and not sched.swap_in_flight
                 and not sched.swap_history and len(done) >= swap_after):
             hs = sched.begin_hot_swap(swap_params,
-                                      chunks_per_step=args.swap_chunks)
+                                      chunks_per_step=args.swap_chunks,
+                                      tenant=swap_tenant)
             print(f"hot-swap: staging {hs.plan.total_chunks} chunks onto "
-                  f"shadow planes after {len(done)} requests "
-                  f"({steps} decode steps)")
+                  f"tenant {swap_tenant}'s write planes after {len(done)} "
+                  f"requests ({steps} decode steps)")
         done += sched.step()
         steps += 1
     # requests can drain before the chunked swap completes — finish the
@@ -132,12 +166,20 @@ def main(argv=None):
     print(f"served {len(done)} requests, {total_tokens} tokens in "
           f"{steps} decode steps, {dt:.2f}s "
           f"({total_tokens / max(dt, 1e-9):.1f} tok/s)")
+    if tenants:
+        for t in sched.tenants:
+            reqs = [r for r in done if r.model_id == t]
+            print(f"  tenant {t}: {len(reqs)} requests, "
+                  f"{sum(len(r.out) for r in reqs)} tokens "
+                  f"(fingerprint={model.executor.fingerprint(tenant=t)})")
     for r in done[:3]:
-        print(f"  req {r.rid}: {r.out[:8]}...")
+        print(f"  req {r.rid} [{r.model_id}]: {r.out[:8]}...")
     for rep in sched.swap_history:
         ex = model.executor
-        print(f"hot-swap promoted: version={ex.programmed_version} "
-              f"fingerprint={ex.fingerprint()} "
+        t = rep.get("tenant", "A")
+        print(f"hot-swap promoted [{rep['policy']} tenant {t}]: "
+              f"version={ex.version(t)} "
+              f"fingerprint={ex.fingerprint(tenant=t)} "
               f"wall={rep['wall_swap_s']:.2f}s "
               f"({rep['decode_steps_during_swap']} decode steps served "
               f"during the swap, zero dropped)")

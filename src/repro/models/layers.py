@@ -188,7 +188,9 @@ def _sdpa(q, k, v, cfg: AttnConfig, q_offset, kv_len=None,
           cross: bool = False):
     """Grouped scaled-dot-product attention on (B, S, H, D) tensors.
 
-    q_offset: absolute position of q[.., 0] for causal masking.
+    q_offset: absolute position of q[.., 0] for causal masking — a
+              scalar, or (B,) when slots sit at different depths
+              (continuous batching admits prompts of different lengths).
     kv_len:   (B,) valid KV lengths (decode), or None for full.
     """
     b, sq, hq, hd = q.shape
@@ -204,9 +206,10 @@ def _sdpa(q, k, v, cfg: AttnConfig, q_offset, kv_len=None,
     logits = jnp.einsum("bskgh,btkh->bkgst", qg, k,
                         preferred_element_type=jnp.float32) * scale
     if cfg.causal and not cross:
-        qpos = q_offset + jnp.arange(sq)
-        mask = qpos[:, None] >= jnp.arange(sk)[None, :]
-        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        qpos = (jnp.asarray(q_offset).reshape(-1, 1)
+                + jnp.arange(sq)[None])                   # (B or 1, sq)
+        mask = qpos[:, :, None] >= jnp.arange(sk)[None, None, :]
+        logits = jnp.where(mask[:, None, None], logits, -1e30)
     if kv_len is not None:
         valid = jnp.arange(sk)[None, :] < kv_len[:, None]
         logits = jnp.where(valid[:, None, None, None], logits, -1e30)
@@ -265,13 +268,15 @@ def attention(p, cfg: AttnConfig, x, positions, cache=None,
         out = _chunked_sdpa(q, k, v, cfg)
         new_cache = None
     else:
-        # decode: append this step's K/V at position cache["len"]
+        # decode: append this step's K/V at each row's own fill position —
+        # slots admitted with different prompt lengths sit at different
+        # depths, so the write index and causal offset are per-row
         q, k, v = _project_qkv(p, cfg, x, positions)
-        pos = cache["len"][0]
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
-            cache["k"].dtype), pos, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
-            cache["v"].dtype), pos, axis=1)
+        pos = cache["len"]                                # (B,)
+        b_idx = jnp.arange(x.shape[0])[:, None]
+        s_idx = pos[:, None] + jnp.arange(sq)[None]
+        ck = cache["k"].at[b_idx, s_idx].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[b_idx, s_idx].set(v.astype(cache["v"].dtype))
         new_len = cache["len"] + sq
         out = _chunked_sdpa(q, ck, cv, cfg, kv_len=new_len, q_offset=pos)
         new_cache = {"k": ck, "v": cv, "len": new_len}

@@ -8,13 +8,14 @@ cache donated, greedy or temperature sampling on-device.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+import time
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.model import Model
-from repro.serve.hotswap import HotSwapper
+from repro.serve.hotswap import HotSwapper, overlap_report
 
 
 def make_prefill_step(model: Model):
@@ -71,50 +72,149 @@ class Request:
     rid: int
     prompt: jax.Array          # (S,) int32
     max_new: int
+    model_id: str = "A"        # tenant whose checkpoint serves this request
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
 
+def _prompt_bucket(m: int, max_len: int) -> int:
+    """Padded prefill length for an ``m``-token prompt slice: the next
+    power of two (>= 8), capped at the cache depth — the jit cache key,
+    so admissions re-trace per *bucket*, not per prompt length."""
+    bucket = 8 if m <= 8 else 1 << (m - 1).bit_length()
+    return min(bucket, max_len)
+
+
+@dataclasses.dataclass
+class _Lane:
+    """One tenant's serving state: a fixed slot batch against one plane
+    set, with its own jitted decode closure (the tiles it traced are that
+    tenant's planes — trace constants, like params sharding)."""
+    tenant: str
+    params: Any
+    slots: List[Optional[Request]]
+    cache: Any
+    tokens: jax.Array
+    queue: List[Request]
+    decode: Callable
+    # True while this tenant's own planes are mid-write (in-place swap):
+    # its reads pause — admissions hold, in-flight slots freeze — and
+    # resume on the promoted weights at the swap boundary
+    paused: bool = False
+
+
 class BatchScheduler:
-    """Minimal continuous-batching scheduler (slot-based).
+    """Minimal continuous-batching scheduler (slot-based, multi-tenant).
 
-    Maintains a fixed decode batch of ``n_slots``; free slots are refilled
-    from the queue by running a fresh prefill for that slot (production
-    systems fuse prefill into the batch; here prefill is per-admission,
-    which keeps the decode step shape static — the property the dry-run
-    cells exercise)."""
+    Maintains a fixed decode batch of ``n_slots`` per tenant; free slots
+    are refilled from that tenant's queue by running a prefill for the
+    slot (production systems fuse prefill into the batch; here prefill is
+    per-admission, which keeps the decode step shape static — the
+    property the dry-run cells exercise).  Admission prefills are jitted
+    and cached per padded prompt-length bucket, so steady-state admission
+    is a cache hit, not a re-trace.
 
-    def __init__(self, model: Model, params, n_slots: int, max_len: int):
-        self.model, self.params = model, params
+    Passing ``tenants={"A": params_a, "B": params_b}`` multiplexes two
+    checkpoints from the two tile planes of ONE crossbar executor: each
+    tenant gets its own slot partition, cache, and jitted decode closure
+    (traced under ``executor.read_tenant(t)`` so the closure's trace
+    constants are that tenant's planes), and every ``step`` interleaves
+    both token streams.  Requests route by ``Request.model_id``.
+    """
+
+    def __init__(self, model: Model, params, n_slots: int, max_len: int,
+                 tenants: Optional[Dict[str, Any]] = None):
+        self.model = model
         self.n_slots, self.max_len = n_slots, max_len
-        self.queue: List[Request] = []
-        self.slots: List[Optional[Request]] = [None] * n_slots
-        self.cache = model.init_cache(n_slots, max_len)
-        self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        tenant_params = dict(tenants) if tenants else {"A": params}
+        if "A" not in tenant_params:
+            raise ValueError("tenant 'A' is required (it anchors the "
+                             "plane pairs)")
         executor = getattr(model, "executor", None)
+        if len(tenant_params) > 1 and executor is None:
+            raise RuntimeError(
+                "multi-tenant multiplexing serves each checkpoint from "
+                "one tile plane of a stacked pair; it requires the "
+                "crossbar backend (ModelConfig(backend='crossbar'))")
         if executor is not None:
-            # crossbar backend: program weights onto the resident tiles
-            # ONCE at scheduler construction — the jitted decode step below
-            # traces against already-programmed tiles (program-at-load,
-            # read-at-inference)
-            executor.ensure_programmed(params)
-        self._decode = jax.jit(make_decode_step(model), donate_argnums=(2,))
+            # crossbar backend: program each tenant's weights onto its
+            # plane set ONCE at scheduler construction — the jitted decode
+            # closures below trace against already-programmed tiles
+            # (program-at-load, read-at-inference)
+            for t in sorted(tenant_params):
+                with executor.read_tenant(t):
+                    executor.ensure_programmed(tenant_params[t])
+        self._lanes: Dict[str, _Lane] = {
+            t: self._make_lane(t, p) for t, p in sorted(tenant_params.items())}
+        # jitted admission prefill per tenant; jax's jit cache keys on the
+        # padded token shape, i.e. one trace per prompt-length bucket
+        self._prefill_fns: Dict[str, Callable] = {}
+        self._prefill_traces = 0     # bumped at trace time (tests pin it)
         self._swap: Optional[HotSwapper] = None
         self.swap_history: List[Dict[str, Any]] = []
 
+    # -- lanes ---------------------------------------------------------------
+
+    def _make_lane(self, tenant: str, params) -> _Lane:
+        return _Lane(tenant=tenant, params=params,
+                     slots=[None] * self.n_slots,
+                     cache=self.model.init_cache(self.n_slots, self.max_len),
+                     tokens=jnp.zeros((self.n_slots, 1), jnp.int32),
+                     queue=[], decode=self._make_decode(tenant))
+
+    def _make_decode(self, tenant: str) -> Callable:
+        base = make_decode_step(self.model)
+        ex = self.model.executor
+        if ex is None:
+            return jax.jit(base, donate_argnums=(2,))
+
+        def tenant_step(params, tokens, cache):
+            with ex.read_tenant(tenant):
+                return base(params, tokens, cache)
+
+        return jax.jit(tenant_step, donate_argnums=(2,))
+
+    @property
+    def params(self):
+        """Tenant A's serving params (single-tenant compatibility)."""
+        return self._lanes["A"].params
+
+    @property
+    def tenants(self) -> List[str]:
+        return sorted(self._lanes)
+
+    @property
+    def queue(self) -> List[Request]:
+        """Tenant A's queue (single-tenant compatibility)."""
+        return self._lanes["A"].queue
+
     def submit(self, req: Request):
-        self.queue.append(req)
+        lane = self._lanes.get(req.model_id)
+        if lane is None:
+            raise ValueError(
+                f"request {req.rid} routes to unknown tenant "
+                f"{req.model_id!r}; serving {self.tenants}")
+        lane.queue.append(req)
 
     # -- deep-net-mode hot-swap (serve reads while shadow planes program) ----
 
-    def begin_hot_swap(self, new_params, chunks_per_step: int = 8
-                       ) -> HotSwapper:
-        """Start programming ``new_params`` onto the write-shadow planes.
+    def begin_hot_swap(self, new_params, chunks_per_step: int = 8,
+                       tenant: str = "A") -> HotSwapper:
+        """Start programming ``new_params`` onto a write plane set.
 
         Chunks are written between decode steps (inside :meth:`step`);
-        when every chunk lands, the planes flip atomically at a step
+        when every chunk lands, the planes land atomically at a step
         boundary and subsequent tokens come from the new weights — no
         request is dropped and no decode step reads mixed planes.
+
+        ``tenant="A"`` (default) writes the free shadow planes while A
+        keeps decoding.  ``tenant="B"`` targets the twin plane set: B's
+        lane pauses for the write window (its planes are the write
+        target) while tenant A's traffic flows uninterrupted — the same
+        read-under-write overlap, re-purposed for multi-tenancy.  A
+        paused lane's in-flight requests freeze in place and resume on
+        the promoted weights, exactly like single-tenant requests that
+        span a flip.
         """
         if self.model.executor is None:
             raise RuntimeError("hot-swap requires the crossbar backend "
@@ -122,87 +222,186 @@ class BatchScheduler:
         if self._swap is not None:
             raise RuntimeError("a hot-swap is already in flight")
         self._swap = HotSwapper(self.model.executor, new_params,
-                                chunks_per_step=chunks_per_step)
+                                chunks_per_step=chunks_per_step,
+                                tenant=tenant)
+        lane = self._lanes.get(tenant)
+        if lane is not None and self._swap.plan.in_place:
+            lane.paused = True
         return self._swap
 
     @property
     def swap_in_flight(self) -> bool:
         return self._swap is not None
 
-    def stop_the_world_swap(self, new_params) -> Dict[str, Any]:
+    def _apply_promotion(self, tenant: str, new_params) -> None:
+        """Land promoted params on a lane: resident planes are trace
+        constants of the jitted closures, so the tenant's decode closure
+        rebuilds (one re-trace, zero dropped requests) and its cached
+        admission prefills are dropped for the same reason.  A tenant
+        deployed live via ``begin_hot_swap(..., tenant="B")`` gets a
+        fresh lane here and starts admitting."""
+        # drop EVERY tenant's cached prefills, not just the target's: a
+        # bucket first traced inside the swap window baked the write
+        # plane's leakage term in as a trace constant (executor.linear),
+        # and must not keep serving it after the window closes
+        self._prefill_fns.clear()
+        lane = self._lanes.get(tenant)
+        if lane is None:
+            self._lanes[tenant] = self._make_lane(tenant, new_params)
+        else:
+            lane.params = new_params
+            lane.decode = self._make_decode(tenant)
+            lane.paused = False
+
+    def stop_the_world_swap(self, new_params,
+                            tenant: str = "A") -> Dict[str, Any]:
         """Blocking reprogram (the conventional-2-D-array policy): serving
-        stalls while every chunk is written, the planes flip, and the
+        stalls while every chunk is written, the planes land, and the
         decode step re-traces.  The comparison baseline for the overlapped
-        path — same end state, but no tokens flow during the swap."""
+        path — same end state, but no tokens flow during the swap.  Like
+        the overlapped path, every deploy lands in ``swap_history`` so
+        benches and operators see it."""
         if self.model.executor is None:
             raise RuntimeError("hot-swap requires the crossbar backend "
                                "(ModelConfig(backend='crossbar'))")
         if self._swap is not None:
             raise RuntimeError("a hot-swap is already in flight")
-        stats = self.model.executor.swap(new_params)
-        self.params = new_params
-        self._decode = jax.jit(make_decode_step(self.model),
-                               donate_argnums=(2,))
+        ex = self.model.executor
+        t0 = time.perf_counter()
+        stats = ex.swap(new_params, tenant=tenant)
+        wall = time.perf_counter() - t0
+        self._apply_promotion(tenant, new_params)
+        rep = overlap_report(ex.cfg, n_grids=ex.n_resident,
+                             n_chunks=stats["n_chunks"],
+                             batch_size=self.n_slots,
+                             decode_steps_during=0, wall_swap_s=wall)
+        rep["policy"] = "stop_the_world"
+        rep["tenant"] = tenant
+        self.swap_history.append(rep)
         return stats
 
     def _advance_swap(self):
         """Program a burst of chunks; promote at the step boundary once
-        the shadow planes are fully written."""
+        the staged planes are fully written."""
         sw = self._swap
         if sw is None:
             return
         sw.step()
         if sw.done:
-            self.params = sw.promote()
-            # resident planes are compile-time constants of the jitted
-            # decode step (program-at-load); the flip invalidates that
-            # closure, so rebuild it — one re-trace, zero dropped requests
-            self._decode = jax.jit(make_decode_step(self.model),
-                                   donate_argnums=(2,))
+            new_params = sw.promote()
+            self._apply_promotion(sw.tenant, new_params)
             self.swap_history.append(sw.report(batch_size=self.n_slots))
             self._swap = None
 
-    def _admit(self):
-        for slot, cur in enumerate(self.slots):
-            if cur is None and self.queue:
-                req = self.queue.pop(0)
+    # -- admission (jitted, bucketed prefill) --------------------------------
+
+    def _build_prefill(self, tenant: str) -> Callable:
+        """Jitted per-slot admission prefill.
+
+        The prompt's first ``m = len-1`` tokens prefill at a padded
+        bucket length (jax's jit cache keys on that shape, so admissions
+        re-trace per bucket, not per prompt length); the cache fill
+        marker is then pinned to ``m`` — pad positions beyond it are
+        length-masked, never attended — and one decode step on the last
+        real token yields the admission token, bit-exact with an unpadded
+        prefill of the full prompt.
+        """
+        model, max_len = self.model, self.max_len
+        ex = model.executor
+
+        def pf(params, tokens_pad, last_tok, m):
+            self._prefill_traces += 1       # trace-time only (host state)
+            cache = model.init_cache(1, max_len)
+            _, cache = model.prefill(params, {"tokens": tokens_pad}, cache)
+            layers = dict(cache["layers"])
+            layers["len"] = jnp.full_like(layers["len"], m)
+            logits, cache = model.decode_step(params, last_tok,
+                                              dict(cache, layers=layers))
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            return tok, cache
+
+        if ex is None:
+            return jax.jit(pf)
+
+        def pf_tenant(params, tokens_pad, last_tok, m):
+            with ex.read_tenant(tenant):
+                return pf(params, tokens_pad, last_tok, m)
+
+        return jax.jit(pf_tenant)
+
+    def _prefill(self, lane: _Lane, prompt: jax.Array):
+        fn = self._prefill_fns.get(lane.tenant)
+        if fn is None:
+            fn = self._prefill_fns[lane.tenant] = self._build_prefill(
+                lane.tenant)
+        m = int(prompt.shape[0]) - 1
+        if m >= self.max_len:
+            # the last real token's K/V lands at position m: the prompt
+            # must fit strictly inside the cache depth or the write (and
+            # every token after it) silently falls off the end
+            raise ValueError(f"prompt length {m + 1} exceeds the "
+                             f"scheduler's max_len {self.max_len}")
+        bucket = _prompt_bucket(m, self.max_len)
+        pad = jnp.zeros((1, bucket), jnp.int32)
+        if m:
+            pad = pad.at[0, :m].set(prompt[:m])
+        return fn(lane.params, pad, prompt[None, -1:].astype(jnp.int32),
+                  jnp.int32(m))
+
+    def _admit(self, lane: _Lane, finished: List[Request]) -> None:
+        for slot in range(self.n_slots):
+            while lane.slots[slot] is None and lane.queue:
+                req = lane.queue.pop(0)
                 # per-slot prefill (batch of 1), then splice into the cache
-                c1 = self.model.init_cache(1, self.max_len)
-                lg, c1 = self.model.prefill(
-                    self.params, {"tokens": req.prompt[None]}, c1)
-                tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)
+                tok, c1 = self._prefill(lane, req.prompt)
                 req.out.append(int(tok[0]))
+                if len(req.out) >= req.max_new:
+                    # the admission token already met the budget: finish
+                    # here and keep the slot free for the next request —
+                    # no decode step burned, no extra token emitted
+                    req.done = True
+                    finished.append(req)
+                    continue
                 # transformer-family caches are (L, B, ...): batch axis 1.
                 # (The scheduler targets decoder LMs; stateful families use
                 # greedy_generate / custom loops.)
-                self.cache = jax.tree.map(
+                lane.cache = jax.tree.map(
                     lambda full, one: jax.lax.dynamic_update_slice_in_dim(
                         full, one.astype(full.dtype), slot, axis=1),
-                    self.cache, c1)
-                self.tokens = self.tokens.at[slot, 0].set(tok[0])
-                self.slots[slot] = req
+                    lane.cache, c1)
+                lane.tokens = lane.tokens.at[slot, 0].set(tok[0])
+                lane.slots[slot] = req
 
     def step(self) -> List[Request]:
-        """One decode step for all active slots; returns finished requests.
+        """One decode step for every tenant's active slots; returns
+        finished requests (across tenants).
 
-        An in-flight hot-swap advances first — shadow-plane chunks program
+        An in-flight hot-swap advances first — plane chunks program
         strictly between decode steps, and promotion happens here at the
-        boundary, so every decode call reads one consistent plane set."""
+        boundary, so every decode call reads one consistent plane set.
+        A lane whose planes are the write target stays paused for the
+        window; the other tenant's lane decodes through it."""
         self._advance_swap()
-        self._admit()
-        if all(s is None for s in self.slots):
-            return []
-        self.tokens, self.cache = self._decode(
-            self.params, self.tokens, self.cache)
-        if self._swap is not None:
-            self._swap.note_decode_step()
-        finished = []
-        for i, req in enumerate(self.slots):
-            if req is None:
+        finished: List[Request] = []
+        decoded = False
+        for t in sorted(self._lanes):
+            lane = self._lanes[t]
+            if lane.paused:
                 continue
-            req.out.append(int(self.tokens[i, 0]))
-            if len(req.out) >= req.max_new:
-                req.done = True
-                finished.append(req)
-                self.slots[i] = None
+            self._admit(lane, finished)
+            if all(s is None for s in lane.slots):
+                continue
+            lane.tokens, lane.cache = lane.decode(
+                lane.params, lane.tokens, lane.cache)
+            decoded = True
+            for i, req in enumerate(lane.slots):
+                if req is None:
+                    continue
+                req.out.append(int(lane.tokens[i, 0]))
+                if len(req.out) >= req.max_new:
+                    req.done = True
+                    finished.append(req)
+                    lane.slots[i] = None
+        if decoded and self._swap is not None:
+            self._swap.note_decode_step()
         return finished

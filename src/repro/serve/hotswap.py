@@ -103,18 +103,23 @@ class HotSwapper:
     """Drives one chunked swap of ``executor`` onto ``new_params``.
 
     Call :meth:`step` between decode steps (the BatchScheduler does this
-    automatically); once :attr:`done`, :meth:`promote` flips every plane
-    pair atomically and returns the new params tree for the caller to
-    serve embeddings/norms from.
+    automatically); once :attr:`done`, :meth:`promote` lands every plane
+    atomically and returns the new params tree for the caller to serve
+    embeddings/norms from.  ``tenant="B"`` targets the twin plane set
+    instead — reprogramming (or live-deploying) tenant B's checkpoint
+    under tenant A's read traffic, the multi-tenant use of the same
+    read-under-write window.
     """
 
-    def __init__(self, executor, new_params: Any, chunks_per_step: int = 8):
+    def __init__(self, executor, new_params: Any, chunks_per_step: int = 8,
+                 tenant: str = "A"):
         if chunks_per_step < 1:
             raise ValueError("chunks_per_step must be >= 1")
         self.executor = executor
         self.new_params = new_params
         self.chunks_per_step = chunks_per_step
-        self.plan: SwapPlan = executor.begin_swap(new_params)
+        self.tenant = tenant
+        self.plan: SwapPlan = executor.begin_swap(new_params, tenant=tenant)
         self.decode_steps_during = 0
         self.promoted = False
         self._wall_begin = time.perf_counter()
@@ -154,8 +159,11 @@ class HotSwapper:
         return self._wall_done - self._wall_begin
 
     def report(self, batch_size: int = 1) -> Dict[str, Any]:
-        return overlap_report(
+        rep = overlap_report(
             self.executor.cfg, n_grids=self.executor.n_resident,
             n_chunks=self.plan.total_chunks, batch_size=batch_size,
             decode_steps_during=self.decode_steps_during,
             wall_swap_s=self.wall_swap_s)
+        rep["policy"] = "overlapped"
+        rep["tenant"] = self.tenant
+        return rep

@@ -233,6 +233,47 @@ def test_scheduler_hot_swap_zero_dropped_requests():
     assert hs.promoted and hs.wall_swap_s > 0
 
 
+def test_stop_the_world_swap_records_swap_history():
+    """Regression: the blocking path must land in ``swap_history`` like
+    the overlapped path does, so hotswap_bench.py and operators see
+    every deploy regardless of policy."""
+    import jax.numpy as jnp
+    from repro.models.model import ModelConfig
+    tiny = ModelConfig(
+        name="tiny", family="dense", n_layers=2, d_model=32, n_heads=2,
+        n_kv=2, head_dim=16, d_ff=64, vocab=128, backend="crossbar",
+        dtype=jnp.float32,
+        xbar=dataclasses.replace(CFG))
+    model = build_model(tiny)
+    params_a = model.init(jax.random.PRNGKey(0))
+    params_b = _ft(params_a)
+    sched = BatchScheduler(model, params_a, n_slots=2, max_len=24)
+    p = jax.random.randint(jax.random.PRNGKey(1), (4,), 0,
+                           tiny.vocab - 1).astype(jnp.int32)
+    sched.submit(Request(rid=0, prompt=p, max_new=6))
+    sched.step()
+    stats = sched.stop_the_world_swap(params_b)
+    assert stats["programmed_version"] == 2
+    # promotion must drop every tenant's cached admission prefills: a
+    # bucket traced inside a swap window bakes the leakage term in as a
+    # trace constant (and the tiles themselves are trace constants)
+    assert sched._prefill_fns == {}
+    (rep,) = sched.swap_history
+    assert rep["policy"] == "stop_the_world" and rep["tenant"] == "A"
+    assert rep["decode_steps_during_swap"] == 0    # serving stalled
+    assert rep["wall_swap_s"] > 0
+    assert rep["n_chunks"] == stats["n_chunks"]
+    # serving resumes on the new planes and the request still completes
+    done, steps = [], 0
+    while not done and steps < 20:
+        done += sched.step()
+        steps += 1
+    assert done and len(done[0].out) == 6
+    cold = CrossbarExecutor(tiny.xbar)
+    cold.program_params(params_b)
+    assert model.executor.fingerprint() == cold.fingerprint()
+
+
 def test_scheduler_rejects_hot_swap_on_digital_backend():
     cfg = get_config("qwen3_4b", smoke=True)
     model = build_model(cfg)

@@ -129,6 +129,76 @@ def _check_swap_mid_generation(swap_begin, chunks_per_step, delta_seed):
         assert toks[flip_at:] == toks_ref_b
 
 
+def _check_tenant_isolation_across_b_swap(swap_begin, chunks_per_step,
+                                          delta_seed):
+    """Multi-tenant analogue of the swap property: tenant A decodes
+    throughout while tenant B's planes reprogram in chunks between A's
+    steps.  A's fingerprint and token stream must be bit-exact with a
+    dedicated A-only executor at EVERY step; B's identity must read as
+    exactly old-B before the promotion boundary and exactly new-B after
+    (never a mixture), with B's reads refused only inside the write
+    window."""
+    model, params_a, params_b = _params_pair(delta_seed)
+    params_b2 = jax.tree_util.tree_map(
+        lambda w: w + 0.03, params_b)
+    prompt = jax.random.randint(jax.random.PRNGKey(delta_seed % 89),
+                                (5,), 0, TINY.vocab - 1).astype(jnp.int32)
+
+    ref_b = CrossbarExecutor(TINY.xbar)
+    ref_b.program_params(params_b)
+    fp_b = ref_b.fingerprint()
+    ref_b2 = CrossbarExecutor(TINY.xbar)
+    ref_b2.program_params(params_b2)
+    fp_b2 = ref_b2.fingerprint()
+
+    ex = model.executor
+    ex.program_params(params_a)
+    ex.program_params(params_b, tenant="B")
+    fp_a = ex.fingerprint(tenant="A")
+
+    # dedicated A-only reference generation
+    model_a = build_model(TINY)
+    model_a.executor.program_params(params_a)
+    tok_r, cache_r = _prefill(model_a, params_a, prompt)
+    toks_ref, _, _ = _decode_run(model_a, params_a, tok_r, cache_r, N_STEPS)
+
+    tok, cache = _prefill(model, params_a, prompt)
+    hs = None
+    flip_at = None
+    toks, fps_a, fps_b = [], [], []
+    for i in range(N_STEPS):
+        if i == swap_begin:
+            hs = HotSwapper(ex, params_b2, chunks_per_step=chunks_per_step,
+                            tenant="B")
+        if hs is not None and not hs.promoted:
+            hs.step()            # B's chunks program BETWEEN A's steps
+            if hs.done:
+                hs.promote()
+                flip_at = i
+        fps_a.append(ex.fingerprint(tenant="A"))
+        if ex.swap_in_flight:
+            # B's planes are mid-write: reads refused, identity unchanged
+            with pytest.raises(RuntimeError, match="mid-write"):
+                ex.linear(jnp.zeros((1, 32)), params_a["head"], "head",
+                          tenant="B")
+            fps_b.append(ex.fingerprint(tenant="B"))
+        else:
+            fps_b.append(ex.fingerprint(tenant="B"))
+        logits, cache = model.decode_step(params_a, tok, cache)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        toks.append(int(tok[0, 0]))
+
+    # tenant A: bit-exact, fingerprint constant, untouched by B's deploy
+    assert toks == toks_ref
+    assert fps_a == [fp_a] * N_STEPS
+    # tenant B: exactly old-B before the flip, exactly new-B after
+    assert set(fps_b) <= {fp_b, fp_b2}
+    if flip_at is None:
+        assert fps_b == [fp_b] * N_STEPS
+    else:
+        assert fps_b == [fp_b] * flip_at + [fp_b2] * (N_STEPS - flip_at)
+
+
 if HAVE_HYPOTHESIS:
     @pytest.mark.slow
     @settings(max_examples=5, deadline=None)
@@ -137,6 +207,15 @@ if HAVE_HYPOTHESIS:
     def test_swap_mid_generation_is_bit_exact_with_no_mixed_plane_reads(
             swap_begin, chunks_per_step, delta_seed):
         _check_swap_mid_generation(swap_begin, chunks_per_step, delta_seed)
+
+    @pytest.mark.slow
+    @settings(max_examples=5, deadline=None)
+    @given(st.integers(0, 4), st.integers(5, 20),
+           st.integers(1, 2 ** 31 - 1))
+    def test_tenant_a_is_isolated_from_tenant_b_swap(
+            swap_begin, chunks_per_step, delta_seed):
+        _check_tenant_isolation_across_b_swap(swap_begin, chunks_per_step,
+                                              delta_seed)
 else:
     @pytest.mark.slow
     @pytest.mark.parametrize("swap_begin,chunks_per_step,delta_seed", [
@@ -147,3 +226,14 @@ else:
     def test_swap_mid_generation_is_bit_exact_with_no_mixed_plane_reads(
             swap_begin, chunks_per_step, delta_seed):
         _check_swap_mid_generation(swap_begin, chunks_per_step, delta_seed)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("swap_begin,chunks_per_step,delta_seed", [
+        (0, 20, 1),        # instant B-flip before any decode
+        (2, 5, 12345),     # multi-step write window under A's traffic
+        (4, 6, 999),       # late begin, promotion near the tail
+    ])
+    def test_tenant_a_is_isolated_from_tenant_b_swap(
+            swap_begin, chunks_per_step, delta_seed):
+        _check_tenant_isolation_across_b_swap(swap_begin, chunks_per_step,
+                                              delta_seed)

@@ -1,0 +1,329 @@
+"""Multi-tenant plane multiplexing: two resident checkpoints served from
+the two tile planes of one executor, per-tenant fingerprints/versions,
+tenant-targeted hot-swap (read-under-write re-purposed for multi-tenancy),
+and the multi-tenant BatchScheduler."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.engine import EngineConfig
+from repro.core.executor import CrossbarExecutor
+from repro.core.quant import QuantConfig
+from repro.models.model import ModelConfig, build_model
+from repro.serve.engine import BatchScheduler, Request
+from repro.serve.hotswap import HotSwapper, finetune_delta
+
+CFG = EngineConfig(tile_rows=32, tile_cols=32, mode="deepnet",
+                   quant=QuantConfig(w_bits=4, in_bits=8, adc_bits=10))
+
+TINY = ModelConfig(
+    name="tiny", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv=2, head_dim=16, d_ff=64, vocab=128, backend="crossbar",
+    dtype=jnp.float32,
+    xbar=EngineConfig(tile_rows=32, tile_cols=32, mode="deepnet",
+                      quant=QuantConfig(w_bits=4, in_bits=6, adc_bits=12)))
+
+
+def _w(key, k, n):
+    return jax.random.normal(jax.random.PRNGKey(key), (k, n)) * 0.3
+
+
+def _cold(w):
+    ex = CrossbarExecutor(CFG)
+    ex.program_params({"head": w})
+    return ex
+
+
+# -- executor-level tenant addressing -----------------------------------------
+
+def test_two_tenants_read_their_own_planes_bit_exact():
+    w_a, w_b = _w(1, 64, 48), _w(2, 64, 48)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 64))
+    ex = CrossbarExecutor(CFG)
+    ex.program_params({"head": w_a})                  # tenant A
+    ex.program_params({"head": w_b}, tenant="B")      # tenant B, twin plane
+    assert ex.tenants == ["A", "B"]
+    # each tenant's read is bit-exact with a dedicated single-tenant
+    # executor programmed from the same checkpoint...
+    assert jnp.array_equal(ex.linear(x, w_a, "head", tenant="A"),
+                           _cold(w_a).linear(x, w_a, "head"))
+    assert jnp.array_equal(ex.linear(x, w_b, "head", tenant="B"),
+                           _cold(w_b).linear(x, w_b, "head"))
+    # ...from HALF the physical devices of two dedicated plane pairs
+    assert ex.n_devices_physical * 2 == (
+        _cold(w_a).n_devices_physical + _cold(w_b).n_devices_physical)
+
+
+def test_ambient_read_tenant_scope_routes_reads_and_fingerprints():
+    w_a, w_b = _w(4, 64, 32), _w(5, 64, 32)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 64))
+    ex = CrossbarExecutor(CFG)
+    ex.program_params({"head": w_a})
+    ex.program_params({"head": w_b}, tenant="B")
+    y_a = ex.linear(x, w_a, "head", tenant="A")
+    with ex.read_tenant("B"):
+        assert jnp.array_equal(ex.linear(x, w_b, "head"),
+                               _cold(w_b).linear(x, w_b, "head"))
+        assert ex.fingerprint() == _cold(w_b).fingerprint()
+    # scope restores: default reads are tenant A again
+    assert jnp.array_equal(ex.linear(x, w_a, "head"), y_a)
+    assert ex.fingerprint() == _cold(w_a).fingerprint()
+    with pytest.raises(ValueError, match="unknown tenant"):
+        with ex.read_tenant("C"):
+            pass
+
+
+def test_per_tenant_fingerprints_and_versions_are_isolated():
+    w_a, w_b = _w(7, 64, 32), _w(8, 64, 32)
+    ex = CrossbarExecutor(CFG)
+    ex.program_params({"head": w_a})
+    fp_a = ex.fingerprint()
+    assert ex.version("A") == 1 and ex.version("B") == 0
+    # programming tenant B leaves tenant A's identity untouched
+    ex.program_params({"head": w_b}, tenant="B")
+    assert ex.fingerprint(tenant="A") == fp_a
+    assert ex.version("A") == 1 and ex.version("B") == 1
+    assert ex.fingerprint(tenant="B") != fp_a
+    assert ex.fingerprints(tenant="B") == {
+        "head": ex.fingerprint("head", tenant="B")}
+    # programmed_version stays the tenant-A counter (dashboards compare it)
+    assert ex.programmed_version == 1
+
+
+def test_tenant_shapes_must_match_the_shared_stack():
+    ex = CrossbarExecutor(CFG)
+    ex.program_params({"head": _w(9, 64, 32)})
+    with pytest.raises(ValueError, match="tile geometry"):
+        ex.program_params({"head": _w(10, 32, 32)}, tenant="B")
+
+
+def test_program_params_rejects_second_tree_per_tenant():
+    ex = CrossbarExecutor(CFG)
+    ex.program_params({"head": _w(11, 64, 32)}, tenant="B")
+    with pytest.raises(RuntimeError, match="tenant 'B'"):
+        ex.program_params({"head": _w(12, 64, 32)}, tenant="B")
+
+
+def test_tenant_b_swap_under_tenant_a_reads():
+    """The tentpole invariant at executor scale: reprogramming tenant B
+    never perturbs tenant A (fingerprint or arithmetic), B's own reads
+    pause while its planes are mid-write, and promotion is atomic."""
+    w_a, w_b, w_b2 = _w(13, 96, 48), _w(14, 96, 48), _w(15, 96, 48)
+    x = jax.random.normal(jax.random.PRNGKey(16), (3, 96))
+    ex = CrossbarExecutor(CFG)
+    ex.program_params({"head": w_a})
+    ex.program_params({"head": w_b}, tenant="B")
+    fp_a, fp_b = ex.fingerprint(tenant="A"), ex.fingerprint(tenant="B")
+    y_a = ex.linear(x, w_a, "head", tenant="A")
+
+    plan = ex.begin_swap({"head": w_b2}, tenant="B")
+    assert plan.in_place and plan.tenant == "B"
+    ex.write_chunks(1)
+    assert not plan.done
+    # mid-write: A serves untouched; B's wordlines drive write pulses
+    assert jnp.array_equal(ex.linear(x, w_a, "head", tenant="A"), y_a)
+    assert ex.fingerprint(tenant="A") == fp_a
+    with pytest.raises(RuntimeError, match="mid-write"):
+        ex.linear(x, w_b, "head", tenant="B")
+    # B's resident identity is still the OLD checkpoint until promote
+    assert ex.fingerprint(tenant="B") == fp_b
+    while not plan.done:
+        ex.write_chunks(8)
+    ex.promote()
+    assert ex.fingerprint(tenant="A") == fp_a
+    assert ex.fingerprint(tenant="B") == _cold(w_b2).fingerprint()
+    assert ex.version("B") == 2 and ex.version("A") == 1
+    assert jnp.array_equal(ex.linear(x, w_b2, "head", tenant="B"),
+                           _cold(w_b2).linear(x, w_b2, "head"))
+    assert jnp.array_equal(ex.linear(x, w_a, "head", tenant="A"), y_a)
+
+
+def test_tenant_b_swap_abort_keeps_old_b_planes():
+    w_a, w_b = _w(17, 64, 32), _w(18, 64, 32)
+    x = jax.random.normal(jax.random.PRNGKey(19), (2, 64))
+    ex = CrossbarExecutor(CFG)
+    ex.program_params({"head": w_a})
+    ex.program_params({"head": w_b}, tenant="B")
+    ex.begin_swap({"head": w_b + 0.1}, tenant="B")
+    ex.write_chunks(64)
+    ex.abort_swap()
+    # staged planes were buffered in the plan, never on the pair: B still
+    # serves its old checkpoint after the abort
+    assert jnp.array_equal(ex.linear(x, w_b, "head", tenant="B"),
+                           _cold(w_b).linear(x, w_b, "head"))
+    assert ex.version("B") == 1
+
+
+def test_live_deploy_tenant_b_via_chunked_swap():
+    """begin_swap(tenant='B') with no resident B is a live deploy onto
+    the free twin planes — the scheduler uses this to bring a second
+    model online under tenant A's traffic."""
+    w_a, w_b = _w(20, 64, 32), _w(21, 64, 32)
+    x = jax.random.normal(jax.random.PRNGKey(22), (2, 64))
+    ex = CrossbarExecutor(CFG)
+    ex.program_params({"head": w_a})
+    assert ex.tenants == ["A"]
+    hs = HotSwapper(ex, {"head": w_b}, chunks_per_step=2, tenant="B")
+    while not hs.done:
+        hs.step()
+    hs.promote()
+    assert ex.tenants == ["A", "B"]
+    assert jnp.array_equal(ex.linear(x, w_b, "head", tenant="B"),
+                           _cold(w_b).linear(x, w_b, "head"))
+    rep = hs.report()
+    assert rep["tenant"] == "B" and rep["policy"] == "overlapped"
+
+
+def test_new_tenant_deploy_refused_while_swap_in_flight():
+    """A first-time tenant claims the twin slots — the write target of an
+    in-flight tenant-A swap; admitting it would make promote() fail
+    half-applied (mixed planes).  Must be refused up front."""
+    w_a = _w(25, 64, 32)
+    ex = CrossbarExecutor(CFG)
+    ex.program_params({"head": w_a})
+    ex.begin_swap({"head": w_a + 0.1})
+    ex.write_chunks(64)                 # fully staged, ready to promote
+    with pytest.raises(RuntimeError, match="while a hot-swap is in"):
+        ex.program_params({"head": _w(26, 64, 32)}, tenant="B")
+    ex.promote()                        # promotion still lands cleanly
+    assert ex.version("A") == 2
+    ex.program_params({"head": _w(26, 64, 32)}, tenant="B")
+    assert ex.tenants == ["A", "B"]
+
+
+def test_shadow_swap_blocked_while_twin_resident_and_evict_frees_it():
+    w_a, w_b = _w(23, 64, 32), _w(24, 64, 32)
+    ex = CrossbarExecutor(CFG)
+    ex.program_params({"head": w_a})
+    ex.program_params({"head": w_b}, tenant="B")
+    # tenant A has no free write plane while B is resident
+    with pytest.raises(RuntimeError, match="no free write plane"):
+        ex.begin_swap({"head": w_a + 0.1})
+    with pytest.raises(ValueError, match="anchors"):
+        ex.evict_tenant("A")
+    ex.evict_tenant("B")
+    assert ex.tenants == ["A"]
+    with pytest.raises(RuntimeError, match="not resident"):
+        ex.fingerprint(tenant="B")
+    ex.swap({"head": w_a + 0.1})        # the shadow slot is free again
+    assert ex.version("A") == 2
+
+
+# -- scheduler-level multiplexing ---------------------------------------------
+
+def _params_pair(delta_seed=7):
+    model = build_model(TINY)
+    params_a = model.init(jax.random.PRNGKey(0))
+    params_b = finetune_delta(params_a, scale=0.05, seed=delta_seed)
+    return model, params_a, params_b
+
+
+def _submit(sched, model_id, n_req, max_new=4, seed0=0):
+    for i in range(n_req):
+        p = jax.random.randint(jax.random.PRNGKey(seed0 + i), (5,), 0,
+                               TINY.vocab - 1).astype(jnp.int32)
+        sched.submit(Request(rid=seed0 + i, prompt=p, max_new=max_new,
+                             model_id=model_id))
+
+
+def _drain(sched, n_req, max_steps=200):
+    done, steps = [], 0
+    while len(done) < n_req and steps < max_steps:
+        done += sched.step()
+        steps += 1
+    return done
+
+
+def test_multiplexed_scheduler_matches_dedicated_single_tenant():
+    """Both tenants' token streams from ONE multiplexed executor are
+    bit-identical to two dedicated single-tenant schedulers — at half
+    the physical device count."""
+    model_m, params_a, params_b = _params_pair()
+    sched = BatchScheduler(model_m, params_a, n_slots=2, max_len=24,
+                           tenants={"A": params_a, "B": params_b})
+    assert sched.tenants == ["A", "B"]
+    _submit(sched, "A", 2, seed0=0)
+    _submit(sched, "B", 2, seed0=100)
+    done = _drain(sched, 4)
+    assert len(done) == 4
+    mux = {r.rid: r.out for r in done}
+
+    for tenant, params, seed0 in (("A", params_a, 0), ("B", params_b, 100)):
+        model_d = build_model(TINY)
+        ded = BatchScheduler(model_d, params, n_slots=2, max_len=24)
+        _submit(ded, "A", 2, seed0=seed0)
+        for r in _drain(ded, 2):
+            assert r.out == mux[r.rid], (tenant, r.rid)
+        # dedicated pair burns its own full stack per checkpoint
+        assert (model_d.executor.n_devices_physical
+                == model_m.executor.n_devices_physical)
+
+
+def test_scheduler_rejects_multiplex_on_digital_backend():
+    cfg = dataclasses.replace(TINY, backend="digital")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(RuntimeError, match="crossbar"):
+        BatchScheduler(model, params, n_slots=2, max_len=24,
+                       tenants={"A": params, "B": params})
+
+
+def test_scheduler_requires_anchor_tenant():
+    model, params_a, params_b = _params_pair()
+    with pytest.raises(ValueError, match="tenant 'A'"):
+        BatchScheduler(model, params_a, n_slots=2, max_len=24,
+                       tenants={"B": params_b})
+
+
+def test_scheduler_rejects_unknown_model_id():
+    model, params_a, _ = _params_pair()
+    sched = BatchScheduler(model, params_a, n_slots=2, max_len=24)
+    with pytest.raises(ValueError, match="unknown tenant"):
+        sched.submit(Request(rid=0, prompt=jnp.zeros(3, jnp.int32),
+                             max_new=2, model_id="B"))
+
+
+def test_tenant_b_hot_swap_under_tenant_a_traffic_drops_nothing():
+    """The acceptance scenario: B's planes reprogram in chunks between
+    A's decode steps; A's stream is bit-identical to a swap-free run,
+    zero A-requests drop, B pauses and resumes on the new checkpoint."""
+    model, params_a, params_b = _params_pair()
+    params_b2 = finetune_delta(params_a, scale=0.09, seed=31)
+
+    # reference: same multiplexed config, no swap — A's expected stream
+    model_r, _, _ = _params_pair()
+    ref = BatchScheduler(model_r, params_a, n_slots=2, max_len=24,
+                         tenants={"A": params_a, "B": params_b})
+    _submit(ref, "A", 2, max_new=8, seed0=0)
+    ref_out = {r.rid: r.out for r in _drain(ref, 2)}
+
+    sched = BatchScheduler(model, params_a, n_slots=2, max_len=24,
+                           tenants={"A": params_a, "B": params_b})
+    _submit(sched, "A", 2, max_new=8, seed0=0)
+    _submit(sched, "B", 1, max_new=3, seed0=200)
+    done = []
+    for _ in range(2):
+        done += sched.step()
+    fp_a = model.executor.fingerprint(tenant="A")
+    sched.begin_hot_swap(params_b2, chunks_per_step=6, tenant="B")
+    assert sched._lanes["B"].paused
+    steps = 0
+    while (sched.swap_in_flight or len(done) < 3) and steps < 200:
+        done += sched.step()
+        steps += 1
+    assert len(done) == 3                      # zero dropped, either tenant
+    for r in done:
+        if r.model_id == "A":
+            assert r.out == ref_out[r.rid]     # A's stream unperturbed
+            assert len(r.out) == 8
+    assert not sched._lanes["B"].paused
+    assert model.executor.fingerprint(tenant="A") == fp_a
+    cold = CrossbarExecutor(TINY.xbar)
+    cold.program_params(params_b2)
+    assert model.executor.fingerprint(tenant="B") == cold.fingerprint()
+    (rep,) = sched.swap_history
+    assert rep["tenant"] == "B" and rep["policy"] == "overlapped"
+    assert rep["decode_steps_during_swap"] > 0
+    assert rep["sustains_2x_during_swap"]

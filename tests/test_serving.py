@@ -1,6 +1,7 @@
 """Serving runtime tests: generation loop + continuous-batching scheduler."""
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.configs import get_config
 from repro.models.model import build_model
@@ -72,3 +73,88 @@ def test_scheduler_matches_unbatched_decode():
     while not done:
         done += sched.step()
     assert done[0].out[:5] == [int(t) for t in ref[:5]]
+
+
+def test_admission_rejects_prompt_longer_than_max_len():
+    """The last real prompt token's K/V lands at position len-1; a prompt
+    of max_len+1 tokens would scatter it past the cache depth and JAX
+    would silently drop the write — must be refused at admission."""
+    cfg, m, params = _model()
+    sched = BatchScheduler(m, params, n_slots=2, max_len=16)
+    p = jax.random.randint(jax.random.PRNGKey(5), (17,), 0,
+                           cfg.vocab - 1).astype(jnp.int32)
+    sched.submit(Request(rid=0, prompt=p, max_new=2))
+    with pytest.raises(ValueError, match="exceeds"):
+        sched.step()
+
+
+def test_max_new_token_counts_are_exact():
+    """Regression: a request must emit EXACTLY max_new tokens.  The old
+    scheduler appended the admission (prefill) token without checking
+    completion, so max_new=1 emitted 2 tokens and burned a decode step."""
+    cfg, m, params = _model()
+    p = jax.random.randint(jax.random.PRNGKey(3), (6,), 0,
+                           cfg.vocab - 1).astype(jnp.int32)
+    for max_new in (1, 2, 3):
+        sched = BatchScheduler(m, params, n_slots=2, max_len=32)
+        sched.submit(Request(rid=0, prompt=p, max_new=max_new))
+        done, steps = [], 0
+        while not done and steps < 20:
+            done += sched.step()
+            steps += 1
+        assert len(done) == 1
+        assert len(done[0].out) == max_new          # pinned, not >=
+        assert done[0].done
+        # max_new=1 finishes at admission: no decode step burned
+        if max_new == 1:
+            assert steps == 1
+
+
+def test_max_new_1_requests_drain_through_free_slots_in_one_step():
+    """Admission-finished requests never occupy a slot, so a queue of
+    max_new=1 requests drains through 2 slots in a single step."""
+    cfg, m, params = _model()
+    sched = BatchScheduler(m, params, n_slots=2, max_len=32)
+    for rid in range(3):
+        p = jax.random.randint(jax.random.PRNGKey(rid), (4,), 0,
+                               cfg.vocab - 1).astype(jnp.int32)
+        sched.submit(Request(rid=rid, prompt=p, max_new=1))
+    done = sched.step()
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    assert all(len(r.out) == 1 for r in done)
+
+
+def test_admission_prefill_jits_once_per_length_bucket():
+    """Perf regression: admissions must reuse a jitted prefill per padded
+    prompt-length bucket instead of re-tracing model.prefill for every
+    new prompt length."""
+    cfg, m, params = _model()
+    sched = BatchScheduler(m, params, n_slots=2, max_len=32)
+    refs = {}
+    for rid, plen in enumerate((1, 3, 5, 8, 9)):
+        p = jax.random.randint(jax.random.PRNGKey(40 + rid), (plen,), 0,
+                               cfg.vocab - 1).astype(jnp.int32)
+        refs[rid] = greedy_generate(m, params, {"tokens": p[None]},
+                                    max_new=3, max_len=32)[0]
+        sched.submit(Request(rid=rid, prompt=p, max_new=3))
+    done, steps = [], 0
+    while len(done) < 5 and steps < 50:
+        done += sched.step()
+        steps += 1
+    # prompt lengths 1..9 prefill m = 0..8 tokens -> every admission
+    # lands in the single 8-wide bucket: ONE trace serves all five
+    assert sched._prefill_traces == 1
+    # ...and the padded path is bit-exact with the unpadded reference
+    for r in done:
+        assert r.out == [int(t) for t in refs[r.rid]]
+    # a longer prompt opens a second bucket (16), one more trace
+    p = jax.random.randint(jax.random.PRNGKey(60), (12,), 0,
+                           cfg.vocab - 1).astype(jnp.int32)
+    ref = greedy_generate(m, params, {"tokens": p[None]}, max_new=2,
+                          max_len=32)[0]
+    sched.submit(Request(rid=99, prompt=p, max_new=2))
+    done = []
+    while not done:
+        done += sched.step()
+    assert sched._prefill_traces == 2
+    assert done[0].out == [int(t) for t in ref]
