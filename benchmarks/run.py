@@ -23,6 +23,7 @@ sys.path.insert(0, _ROOT)   # so ``python benchmarks/run.py`` also works
 from benchmarks import executor_bench as xb  # noqa: E402
 from benchmarks import hotswap_bench as hb  # noqa: E402
 from benchmarks import multiplex_bench as mb  # noqa: E402
+from benchmarks import overlap_kernel_bench as okb  # noqa: E402
 from benchmarks import paper_benches as pb  # noqa: E402
 from benchmarks.meta import append_trajectory, write_stamped  # noqa: E402
 
@@ -44,6 +45,7 @@ RESIDENCY_BENCHES = [
     ("executor_decode_resident", xb.bench_executor_decode),
     ("hotswap_overlap", hb.bench_hotswap),
     ("multiplex_plane_sharing", mb.bench_multiplex),
+    ("overlap_kernel_decode", okb.bench_overlap_kernel),
 ]
 
 
@@ -61,7 +63,8 @@ def main(argv=None) -> None:
     # here to avoid paying the same serving loops twice per CI run
     quick_benches = [(n, f) for n, f in RESIDENCY_BENCHES
                      if n not in ("hotswap_overlap",
-                                  "multiplex_plane_sharing")]
+                                  "multiplex_plane_sharing",
+                                  "overlap_kernel_decode")]
     benches = ([(n, lambda f=f: f(quick=True)) for n, f in quick_benches]
                if args.quick else
                BENCHES + [(n, f) for n, f in RESIDENCY_BENCHES])

@@ -125,23 +125,33 @@ def _adc_codes(acc: jax.Array, cfg: EngineConfig) -> jax.Array:
     return code * lsb
 
 
+# host-side dispatch counters (bumped per call, i.e. per trace under jit).
+# Benches and the overlap property test snapshot these around a decode
+# closure's trace to prove the hot path lowered the Pallas kernel and not
+# the reference scan.
+path_calls = {"kernel": 0, "reference": 0}
+
+
 def matmul(x: jax.Array, pw: ProgrammedLinear, cfg: EngineConfig,
-           leak_codes: float = 0.0) -> jax.Array:
+           leak_codes=0.0) -> jax.Array:
     """Bit-exact crossbar execution of ``x @ W`` for x of shape (..., K).
 
     ``leak_codes`` is the common-mode write-plane leakage in pre-ADC code
-    units (deep-net overlap; see ``planes.write_leak_codes``).  The Pallas
-    kernel does not model leakage, so a nonzero value routes through the
-    reference path.
+    units (deep-net overlap; see ``planes.write_leak_codes``) — a python
+    float or a *traced* scalar.  The Pallas kernel fuses it into its ADC
+    stage, so ``use_kernel`` traffic stays on the kernel path during an
+    overlap read (precisely when throughput matters most); as a traced
+    operand it changes value between decode steps without re-lowering.
     """
-    if cfg.use_kernel and leak_codes == 0.0:
+    if cfg.use_kernel:
         from repro.kernels.crossbar_mac import ops as cb_ops
-        return cb_ops.crossbar_matmul(x, pw, cfg)
+        path_calls["kernel"] += 1
+        return cb_ops.crossbar_matmul(x, pw, cfg, leak_codes=leak_codes)
     return matmul_reference(x, pw, cfg, leak_codes=leak_codes)
 
 
 def matmul_reference(x: jax.Array, pw: ProgrammedLinear, cfg: EngineConfig,
-                     leak_codes: float = 0.0) -> jax.Array:
+                     leak_codes=0.0) -> jax.Array:
     """Scan-based reference: one (pulse, slice) step at a time, ADC fused.
 
     The einsum formulation (kept as ``_matmul_reference_einsum``) holds the
@@ -156,6 +166,7 @@ def matmul_reference(x: jax.Array, pw: ProgrammedLinear, cfg: EngineConfig,
     each ADC conversion (modes.deepnet_read at executor scale): the term
     is common-mode and survives only through ADC quantization.
     """
+    path_calls["reference"] += 1
     q = cfg.quant
     lead = x.shape[:-1]
     xb = x.reshape(-1, x.shape[-1])                     # (B, K)

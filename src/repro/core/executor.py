@@ -119,6 +119,16 @@ class CrossbarExecutor:
         # when no explicit tenant is passed — trace-time Python state, set
         # by read_tenant() around a serving closure's trace
         self._read_tenant: str = "A"
+        # ambient leak override: a serving closure traces under
+        # leak_scope(<traced scalar>) so the write-plane leakage is an
+        # ARGUMENT of the compiled step (0.0 outside a swap window, the
+        # live value inside it) instead of a trace-time constant
+        self._leak_override: Optional[Any] = None
+        # cached device scalars for current_leak_codes(): cfg is frozen,
+        # so both values are constants — one host->device put each, not
+        # one per decode step
+        self._leak_zero: Optional[jax.Array] = None
+        self._leak_live: Optional[jax.Array] = None
         self.stats = {"programmed": 0, "cache_hits": 0, "program_walks": 0,
                       "swaps": 0, "swap_chunks": 0}
 
@@ -151,6 +161,36 @@ class CrossbarExecutor:
     def tenants(self) -> List[str]:
         """Resident tenants (those with a programmed plane set)."""
         return sorted(self._programmed_leaves)
+
+    # -- write-plane leakage (deep-net overlap reads) ------------------------
+
+    @contextlib.contextmanager
+    def leak_scope(self, leak_codes):
+        """Ambient leak override: reads inside the block carry
+        ``leak_codes`` as their common-mode pre-ADC term, whatever the
+        swap state.  Trace a serving closure under this with the
+        closure's own *traced* scalar argument — the compiled step then
+        accepts the live value per call (0.0 steady-state, the write
+        plane's leakage during an overlap window) with zero re-traces."""
+        prev, self._leak_override = self._leak_override, leak_codes
+        try:
+            yield self
+        finally:
+            self._leak_override = prev
+
+    def current_leak_codes(self) -> jax.Array:
+        """The leak value a read issued NOW should carry, as a device
+        scalar: the write plane's subthreshold leakage while a swap is in
+        flight with ``cfg.swap_leakage`` set, else 0.0.  Serving loops
+        feed this to closures traced under :meth:`leak_scope` each step
+        (both scalars are cached — no per-step transfer)."""
+        if self._swap is not None and self.cfg.swap_leakage:
+            if self._leak_live is None:
+                self._leak_live = planes.write_leak_scalar(self.cfg)
+            return self._leak_live
+        if self._leak_zero is None:
+            self._leak_zero = jnp.float32(0.0)
+        return self._leak_zero
 
     # -- programming (the write path; once per deployment) -----------------
 
@@ -288,11 +328,13 @@ class CrossbarExecutor:
         :meth:`read_tenant` scope, i.e. tenant "A" unless a serving lane
         set otherwise).  While a hot-swap is in flight and
         ``cfg.swap_leakage`` is set, reads carry the write plane's
-        subthreshold leakage (a trace-time constant: the overlay applies
-        to eager / freshly traced reads, not to an already-compiled
-        serving step).  Reads of a tenant whose own planes are mid-write
-        (an in-place tenant swap) are refused — those wordlines are
-        driving write pulses, not read pulses.
+        subthreshold leakage; a closure traced under :meth:`leak_scope`
+        instead takes the leak as its own traced argument, so a compiled
+        serving step applies the LIVE value per call (and the Pallas
+        kernel fuses it pre-ADC — overlap reads stay on the kernel
+        path).  Reads of a tenant whose own planes are mid-write (an
+        in-place tenant swap) are refused — those wordlines are driving
+        write pulses, not read pulses.
         """
         tenant = self._resolve_tenant(tenant)
         if (self._swap is not None and self._swap.in_place
@@ -306,8 +348,12 @@ class CrossbarExecutor:
         k = math.prod(x.shape[-n_in:])
         if k != pw.k:
             raise ValueError(f"{name}: input dim {k} != programmed {pw.k}")
-        leak = (planes.write_leak_codes(self.cfg)
-                if self._swap is not None and self.cfg.swap_leakage else 0.0)
+        if self._leak_override is not None:
+            leak = self._leak_override
+        else:
+            leak = (planes.write_leak_codes(self.cfg)
+                    if self._swap is not None and self.cfg.swap_leakage
+                    else 0.0)
         y = engine.matmul(x.reshape(*lead, k).astype(jnp.float32), pw,
                           self.cfg, leak_codes=leak)
         return y.reshape(*lead, *w.shape[n_in:]).astype(x.dtype)

@@ -393,3 +393,12 @@ def write_leak_codes(cfg: EngineConfig) -> float:
     base = 2 ** cfg.quant.bits_per_cell
     i_unit = p.v_read * (p.g_set - p.g_reset) / (base - 1)
     return cfg.tile_rows * p.i_leak_0 / i_unit
+
+
+def write_leak_scalar(cfg: EngineConfig) -> jax.Array:
+    """:func:`write_leak_codes` as a device scalar — the form a serving
+    loop feeds its jitted decode closure each step: the closure takes it
+    as a *traced* argument, so flipping between 0.0 (steady state) and
+    the leak value (an active swap window) never re-traces, and the
+    Pallas kernel fuses it pre-ADC without re-lowering."""
+    return jnp.float32(write_leak_codes(cfg))

@@ -1,12 +1,14 @@
-"""JAX version compatibility for Pallas TPU compiler params.
+"""JAX version compatibility for Pallas TPU constructs.
 
 ``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in
 newer JAX releases (and the old name later removed).  All kernels build
 their compiler params through :func:`tpu_compiler_params` so either JAX
-works unchanged.
+works unchanged.  :func:`smem_scalar_spec` papers over the BlockSpec
+``memory_space`` keyword (absent in older JAX) for (1, 1) scalar operands.
 """
 from __future__ import annotations
 
+from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 if hasattr(pltpu, "CompilerParams"):
@@ -18,3 +20,13 @@ else:
 def tpu_compiler_params(**kwargs):
     """Construct TPU compiler params under whichever name this JAX has."""
     return TPUCompilerParams(**kwargs)
+
+
+def smem_scalar_spec(index_map):
+    """BlockSpec for a (1, 1) scalar operand, in SMEM where this JAX
+    supports naming the memory space (scalars belong in SMEM on TPU; the
+    interpreter ignores the space, so CPU behavior is identical)."""
+    try:
+        return pl.BlockSpec((1, 1), index_map, memory_space=pltpu.SMEM)
+    except (TypeError, AttributeError):
+        return pl.BlockSpec((1, 1), index_map)

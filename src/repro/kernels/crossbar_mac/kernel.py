@@ -14,6 +14,23 @@ mode, tile_rows in deep-net mode).  Inside the body:
     is revisited across the row-group grid axis (standard accumulate-over-K
     pattern; the K axis is marked "arbitrary").
 
+Deep-net overlap reads (paper Fig. 3c): while the twin plane of a stacked
+pair is being programmed, its OFF access transistors leak a common-mode
+current into the shared columns.  That term rides into BOTH differential
+conversions as a pre-ADC code offset — so it is a *scalar operand*, not a
+compile-time constant: ``leak`` arrives as a (1, 1) f32 ref in SMEM and is
+added to each analog accumulator before the ADC, exactly where
+``engine._adc_codes(acc + leak_codes)`` applies it in the reference.
+Passing it as a traced operand means one compiled kernel serves leak = 0
+(steady state) and leak != 0 (an active hot-swap window) without
+re-lowering — the serving tier flips the value per decode step.
+
+ADC full scale is set by the *mode's* conversion group
+(``full_scale_rows``), which may exceed ``rows_per_adc`` when an odd
+row-tile count forces per-plane conversions in expansion mode (see
+ops.py): the converter hardware keeps its range; only the analog group
+shrinks.
+
 VMEM budget per step (f32 words):
   x: block_b * rows  +  pos/neg: 2 * S * rows * block_n  +  out: block_b * block_n
 With the default block_b = block_n = 128, rows = 256, S <= 4 this is
@@ -27,12 +44,13 @@ configs) and the output tile is 128-aligned.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.compat import smem_scalar_spec, tpu_compiler_params
 
 
 def _adc(acc, adc_bits: int, full_scale: float):
@@ -43,8 +61,9 @@ def _adc(acc, adc_bits: int, full_scale: float):
     return jnp.clip(jnp.round(acc / lsb), 0.0, levels) * lsb
 
 
-def _kernel(x_ref, pos_ref, neg_ref, out_ref, *, in_bits: int,
-            adc_bits: int, bits_per_cell: int, rows_per_adc: int):
+def _kernel(leak_ref, x_ref, pos_ref, neg_ref, out_ref, *, in_bits: int,
+            adc_bits: int, bits_per_cell: int, rows_per_adc: int,
+            full_scale_rows: int):
     t = pl.program_id(2)
 
     @pl.when(t == 0)
@@ -52,7 +71,8 @@ def _kernel(x_ref, pos_ref, neg_ref, out_ref, *, in_bits: int,
         out_ref[...] = jnp.zeros_like(out_ref)
 
     base = 2 ** bits_per_cell
-    full_scale = float(rows_per_adc * (base - 1))
+    full_scale = float(full_scale_rows * (base - 1))
+    leak = leak_ref[0, 0]                                 # common-mode code
     x = x_ref[...].astype(jnp.int32)                      # (B, R)
     u = (x + (1 << in_bits)) % (1 << in_bits)             # two's complement
 
@@ -66,35 +86,47 @@ def _kernel(x_ref, pos_ref, neg_ref, out_ref, *, in_bits: int,
                              preferred_element_type=jnp.float32)
             an = jax.lax.dot(xb, neg_ref[s].astype(jnp.float32),
                              preferred_element_type=jnp.float32)
-            d = (_adc(ap, adc_bits, full_scale)
-                 - _adc(an, adc_bits, full_scale))
+            d = (_adc(ap + leak, adc_bits, full_scale)
+                 - _adc(an + leak, adc_bits, full_scale))
             acc = acc + (bitw * slcw) * d
     out_ref[...] += acc
 
 
 @functools.partial(jax.jit, static_argnames=(
     "in_bits", "adc_bits", "bits_per_cell", "rows_per_adc",
-    "block_b", "block_n", "interpret"))
-def crossbar_mac(x_int, pos, neg, *, in_bits: int, adc_bits: int,
-                 bits_per_cell: int, rows_per_adc: int,
+    "full_scale_rows", "block_b", "block_n", "interpret"))
+def crossbar_mac(x_int, pos, neg, leak_codes=0.0, *, in_bits: int,
+                 adc_bits: int, bits_per_cell: int, rows_per_adc: int,
+                 full_scale_rows: Optional[int] = None,
                  block_b: int = 128, block_n: int = 128,
                  interpret: bool = True):
     """x_int (B, K) int32, pos/neg (S, K, N) int8 -> (B, N) f32 code units.
 
-    K must be a multiple of rows_per_adc; B of block_b; N of block_n
-    (ops.py pads).  interpret=True on CPU; False on real TPU.
+    ``leak_codes`` is the write-plane common-mode leakage in pre-ADC code
+    units — a *traced* scalar (python float or 0-d array): changing its
+    value does not re-lower the kernel.  ``full_scale_rows`` sets the ADC
+    full scale independently of the contraction group (defaults to
+    ``rows_per_adc``; ops.py passes the mode's group when an odd row-tile
+    count forces smaller conversions).  K must be a multiple of
+    rows_per_adc; B of block_b; N of block_n (ops.py pads).
+    interpret=True on CPU; False on real TPU.
     """
     b, k = x_int.shape
     s, k2, n = pos.shape
     assert k == k2 and k % rows_per_adc == 0
+    if full_scale_rows is None:
+        full_scale_rows = rows_per_adc
     grid = (b // block_b, n // block_n, k // rows_per_adc)
+    leak = jnp.asarray(leak_codes, jnp.float32).reshape(1, 1)
 
     return pl.pallas_call(
         functools.partial(_kernel, in_bits=in_bits, adc_bits=adc_bits,
                           bits_per_cell=bits_per_cell,
-                          rows_per_adc=rows_per_adc),
+                          rows_per_adc=rows_per_adc,
+                          full_scale_rows=full_scale_rows),
         grid=grid,
         in_specs=[
+            smem_scalar_spec(lambda i, j, t: (0, 0)),
             pl.BlockSpec((block_b, rows_per_adc), lambda i, j, t: (i, t)),
             pl.BlockSpec((s, rows_per_adc, block_n),
                          lambda i, j, t: (0, t, j)),
@@ -106,4 +138,4 @@ def crossbar_mac(x_int, pos, neg, *, in_bits: int, adc_bits: int,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x_int, pos, neg)
+    )(leak, x_int, pos, neg)

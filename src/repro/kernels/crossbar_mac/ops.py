@@ -2,14 +2,22 @@
 
 Handles quantization, padding to kernel-friendly shapes, scale application
 and un-padding, so ``engine.matmul(..., use_kernel=True)`` is a drop-in for
-the jnp reference path.
+the jnp reference path — including deep-net overlap reads, where the write
+plane's common-mode leakage arrives as a traced ``leak_codes`` scalar
+(changing its value between decode steps never re-lowers the kernel).
 """
 from __future__ import annotations
+
+import warnings
 
 import jax.numpy as jnp
 
 from repro.core import quant
 from repro.kernels.crossbar_mac.kernel import crossbar_mac
+
+# grouping-fallback warnings already emitted, keyed by tile geometry —
+# warn once per geometry, not once per traced matmul
+_FALLBACK_WARNED = set()
 
 
 def _pad_axis(x, mult, axis):
@@ -22,8 +30,13 @@ def _pad_axis(x, mult, axis):
     return jnp.pad(x, widths)
 
 
-def crossbar_matmul(x, pw, cfg):
-    """x (..., K) float, pw: ProgrammedLinear, cfg: EngineConfig -> (..., N)."""
+def crossbar_matmul(x, pw, cfg, leak_codes=0.0):
+    """x (..., K) float, pw: ProgrammedLinear, cfg: EngineConfig -> (..., N).
+
+    ``leak_codes`` (python float or traced 0-d array) is the in-flight
+    shadow write's common-mode pre-ADC offset, fused into the kernel's ADC
+    stage exactly as ``engine.matmul_reference`` applies it.
+    """
     q = cfg.quant
     lead = x.shape[:-1]
     xb = x.reshape(-1, x.shape[-1])
@@ -35,9 +48,26 @@ def crossbar_matmul(x, pw, cfg):
     x_int = _pad_axis(x_int.astype(jnp.int32), t * r, axis=-1)
 
     rows_per_adc = cfg.rows_per_adc
+    full_scale_rows = cfg.rows_per_adc
     if (t * r) % rows_per_adc != 0:
-        # odd number of row tiles in expansion mode: fall back to per-plane
+        # odd number of row tiles in expansion mode: the pairwise analog
+        # sum has no partner tile, so conversions fall back to per-plane
+        # groups.  The ADC itself keeps the mode's full scale
+        # (full_scale_rows) — matching the reference path, which digitizes
+        # un-paired tiles against the expansion-mode range.
         rows_per_adc = r
+        key = (cfg.mode, t, r)
+        if key not in _FALLBACK_WARNED:
+            _FALLBACK_WARNED.add(key)
+            warnings.warn(
+                f"crossbar_mac: {t} row tiles of {r} rows cannot pair for "
+                f"{cfg.mode}-mode analog summation ({t * r} rows % "
+                f"{cfg.rows_per_adc} rows/ADC != 0); falling back to "
+                f"per-plane conversions ({r} rows/ADC at the mode's "
+                f"{full_scale_rows}-row full scale). ADC grouping differs "
+                f"from the even-tile layout — pad K to a multiple of "
+                f"{cfg.rows_per_adc} rows to avoid this.",
+                stacklevel=3)
 
     block_b = min(128, max(8, x_int.shape[0]))
     block_n = min(128, n_pad)
@@ -46,8 +76,10 @@ def crossbar_matmul(x, pw, cfg):
     neg = _pad_axis(neg, block_n, axis=-1)
 
     y = crossbar_mac(
-        x_pad, pos, neg, in_bits=q.in_bits, adc_bits=q.adc_bits,
+        x_pad, pos, neg, leak_codes,
+        in_bits=q.in_bits, adc_bits=q.adc_bits,
         bits_per_cell=q.bits_per_cell, rows_per_adc=rows_per_adc,
+        full_scale_rows=full_scale_rows,
         block_b=block_b, block_n=min(block_n, pos.shape[-1]),
         interpret=cfg.interpret)
 

@@ -3,11 +3,15 @@
 Computes the bit-exact digital twin of a CrossStack tile grid:
 
   y[b, n] = sum_t sum_s sum_p bitw[p] * slcw[s]
-              * ( ADC( xbits[p, b, t, :] @ pos[s, t, :, n] )
-                - ADC( xbits[p, b, t, :] @ neg[s, t, :, n] ) )
+              * ( ADC( xbits[p, b, t, :] @ pos[s, t, :, n] + leak )
+                - ADC( xbits[p, b, t, :] @ neg[s, t, :, n] + leak ) )
 
-with xbits the two's-complement bit-serial planes of the int inputs and
-ADC the saturating uniform quantizer over [0, rows_per_adc * (base - 1)].
+with xbits the two's-complement bit-serial planes of the int inputs, ADC
+the saturating uniform quantizer over [0, full_scale_rows * (base - 1)],
+and ``leak`` the common-mode pre-ADC code offset of an in-flight deep-net
+shadow write (paper Fig. 3c; 0.0 in steady state).  The term hits both
+differential conversions identically, so it survives only through ADC
+quantization — which is what the kernel must reproduce exactly.
 
 Shapes (code units, no scales — scales are applied by the caller):
   x_int : (B, T * R) int32   — quantized inputs, row-tiled
@@ -16,6 +20,8 @@ Shapes (code units, no scales — scales are applied by the caller):
 Returns (B, N) float32 in integer code units.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax.numpy as jnp
 
@@ -27,13 +33,18 @@ def adc(acc, adc_bits: int, full_scale: float):
 
 
 def crossbar_mac_ref(x_int, pos, neg, *, in_bits: int, adc_bits: int,
-                     bits_per_cell: int, rows_per_adc: int):
+                     bits_per_cell: int, rows_per_adc: int,
+                     full_scale_rows: Optional[int] = None,
+                     leak_codes=0.0):
     s, kr, n = pos.shape
     b = x_int.shape[0]
     assert kr % rows_per_adc == 0, (kr, rows_per_adc)
     t = kr // rows_per_adc
     base = 2 ** bits_per_cell
-    full_scale = float(rows_per_adc * (base - 1))
+    if full_scale_rows is None:
+        full_scale_rows = rows_per_adc
+    full_scale = float(full_scale_rows * (base - 1))
+    leak = jnp.asarray(leak_codes, jnp.float32)
 
     u = (x_int.astype(jnp.int32) + (1 << in_bits)) % (1 << in_bits)
     u = u.reshape(b, t, rows_per_adc)
@@ -48,6 +59,7 @@ def crossbar_mac_ref(x_int, pos, neg, *, in_bits: int, adc_bits: int,
             slcw = float(base ** si)
             ap = jnp.einsum("btr,trn->btn", xb, pos[si])
             an = jnp.einsum("btr,trn->btn", xb, neg[si])
-            d = adc(ap, adc_bits, full_scale) - adc(an, adc_bits, full_scale)
+            d = (adc(ap + leak, adc_bits, full_scale)
+                 - adc(an + leak, adc_bits, full_scale))
             out = out + bitw * slcw * d.sum(axis=1)
     return out

@@ -163,13 +163,23 @@ class BatchScheduler:
                      queue=[], decode=self._make_decode(tenant))
 
     def _make_decode(self, tenant: str) -> Callable:
+        """Jitted decode closure ``(params, tokens, cache, leak) -> ...``.
+
+        ``leak`` is the write-plane leakage of an in-flight hot-swap as a
+        *traced* scalar: the same compiled step serves leak = 0.0 in
+        steady state and the live value during an overlap window — no
+        re-trace at window boundaries, and (with ``cfg.use_kernel``) the
+        Pallas kernel applies it pre-ADC, so overlap decode never falls
+        back to the reference scan."""
         base = make_decode_step(self.model)
         ex = self.model.executor
         if ex is None:
-            return jax.jit(base, donate_argnums=(2,))
+            digital = jax.jit(base, donate_argnums=(2,))
+            return lambda params, tokens, cache, leak: digital(
+                params, tokens, cache)
 
-        def tenant_step(params, tokens, cache):
-            with ex.read_tenant(tenant):
+        def tenant_step(params, tokens, cache, leak):
+            with ex.read_tenant(tenant), ex.leak_scope(leak):
                 return base(params, tokens, cache)
 
         return jax.jit(tenant_step, donate_argnums=(2,))
@@ -240,11 +250,11 @@ class BatchScheduler:
         admission prefills are dropped for the same reason.  A tenant
         deployed live via ``begin_hot_swap(..., tenant="B")`` gets a
         fresh lane here and starts admitting."""
-        # drop EVERY tenant's cached prefills, not just the target's: a
-        # bucket first traced inside the swap window baked the write
-        # plane's leakage term in as a trace constant (executor.linear),
-        # and must not keep serving it after the window closes
-        self._prefill_fns.clear()
+        # only the swapped tenant's cached prefills go stale: its planes
+        # (trace constants) just changed.  Leakage is NOT baked into any
+        # closure — it flows as a traced argument (leak_scope) — so the
+        # other tenant's buckets stay warm across the window.
+        self._prefill_fns.pop(tenant, None)
         lane = self._lanes.get(tenant)
         if lane is None:
             self._lanes[tenant] = self._make_lane(tenant, new_params)
@@ -321,13 +331,26 @@ class BatchScheduler:
             return tok, cache
 
         if ex is None:
-            return jax.jit(pf)
+            digital = jax.jit(pf)
+            return lambda params, tokens_pad, last_tok, m, leak: digital(
+                params, tokens_pad, last_tok, m)
 
-        def pf_tenant(params, tokens_pad, last_tok, m):
-            with ex.read_tenant(tenant):
+        def pf_tenant(params, tokens_pad, last_tok, m, leak):
+            # like decode: leak is a traced argument, so an admission
+            # inside the swap window carries the live leakage through the
+            # SAME compiled bucket that serves steady-state admissions
+            with ex.read_tenant(tenant), ex.leak_scope(leak):
                 return pf(params, tokens_pad, last_tok, m)
 
         return jax.jit(pf_tenant)
+
+    def _leak_now(self) -> jax.Array:
+        """The leak scalar this step's closures should carry (see
+        ``CrossbarExecutor.current_leak_codes``): 0.0 outside a swap
+        window, the write plane's leakage inside one."""
+        ex = self.model.executor
+        return (ex.current_leak_codes() if ex is not None
+                else jnp.float32(0.0))
 
     def _prefill(self, lane: _Lane, prompt: jax.Array):
         fn = self._prefill_fns.get(lane.tenant)
@@ -346,7 +369,7 @@ class BatchScheduler:
         if m:
             pad = pad.at[0, :m].set(prompt[:m])
         return fn(lane.params, pad, prompt[None, -1:].astype(jnp.int32),
-                  jnp.int32(m))
+                  jnp.int32(m), self._leak_now())
 
     def _admit(self, lane: _Lane, finished: List[Request]) -> None:
         for slot in range(self.n_slots):
@@ -384,6 +407,7 @@ class BatchScheduler:
         self._advance_swap()
         finished: List[Request] = []
         decoded = False
+        leak = self._leak_now()
         for t in sorted(self._lanes):
             lane = self._lanes[t]
             if lane.paused:
@@ -392,7 +416,7 @@ class BatchScheduler:
             if all(s is None for s in lane.slots):
                 continue
             lane.tokens, lane.cache = lane.decode(
-                lane.params, lane.tokens, lane.cache)
+                lane.params, lane.tokens, lane.cache, leak)
             decoded = True
             for i, req in enumerate(lane.slots):
                 if req is None:

@@ -133,6 +133,15 @@ class HotSwapper:
     def remaining(self) -> int:
         return self.plan.remaining
 
+    @property
+    def leak_codes(self) -> jax.Array:
+        """This window's write-plane leakage as a device scalar (0.0 when
+        the config doesn't model it, or once promoted) — what the
+        scheduler feeds the lane closures each step so overlap reads
+        carry the live value without re-tracing (delegates to
+        ``CrossbarExecutor.current_leak_codes``; see ``leak_scope``)."""
+        return self.executor.current_leak_codes()
+
     def step(self, n: Optional[int] = None) -> int:
         """Program up to ``n`` (default ``chunks_per_step``) chunks onto
         the shadow planes; returns chunks still unwritten."""

@@ -5,7 +5,14 @@ weights for every token produced before the flip and (b) the post-swap
 weights for every token after it, with no decode step ever reading a
 mixed set of planes — the serving-tier analogue of pipeline.py's
 "the pipeline reorders *time*, not *math*" invariant.
+
+A second property guards the overlap HOT PATH itself: with
+``use_kernel=True`` the decode closure must lower the Pallas kernel (not
+the reference scan), and the write window must reuse that same compiled
+closure — the leak arrives as a traced argument, never as a re-trace.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import pytest
@@ -197,6 +204,56 @@ def _check_tenant_isolation_across_b_swap(swap_begin, chunks_per_step,
         assert fps_b == [fp_b] * N_STEPS
     else:
         assert fps_b == [fp_b] * flip_at + [fp_b2] * (N_STEPS - flip_at)
+
+
+def test_kernel_path_serves_overlap_decode_without_retrace():
+    """The serving closure lowers the Pallas kernel, and an active swap
+    window (leak != 0) is served by the SAME compiled closure: no
+    re-trace at the window boundary, and never the reference scan."""
+    from repro.core import engine as eng
+    from repro.serve.engine import BatchScheduler, Request
+
+    kcfg = dataclasses.replace(TINY.xbar, use_kernel=True,
+                               swap_leakage=True)
+    cfg = dataclasses.replace(TINY, xbar=kcfg)
+    model = build_model(cfg)
+    params_a = model.init(jax.random.PRNGKey(0))
+    leaves, tdef = jax.tree_util.tree_flatten(params_a)
+    params_b = jax.tree_util.tree_unflatten(tdef, [
+        w + 0.05 * jax.random.normal(
+            jax.random.fold_in(jax.random.PRNGKey(2), i), w.shape)
+        for i, w in enumerate(leaves)])
+
+    sched = BatchScheduler(model, params_a, n_slots=1, max_len=32)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (5,), 0,
+                                TINY.vocab - 1).astype(jnp.int32)
+    sched.submit(Request(rid=0, prompt=prompt, max_new=24))
+
+    # steady state: admission + decode trace once, all through the kernel
+    before = dict(eng.path_calls)
+    sched.step()
+    assert eng.path_calls["kernel"] > before["kernel"]
+    assert eng.path_calls["reference"] == before["reference"]
+
+    # open the write window; the executor now reports a nonzero leak
+    sched.begin_hot_swap(params_b, chunks_per_step=1)
+    ex = model.executor
+    assert float(ex.current_leak_codes()) > 0.0
+
+    # overlap decode: the already-compiled kernel closure serves it —
+    # zero new matmul dispatches of either kind (a re-trace would bump
+    # "kernel"; a fallback would bump "reference")
+    during = dict(eng.path_calls)
+    sched.step()
+    assert sched.swap_in_flight     # 1 chunk/step: window is still open
+    assert eng.path_calls == during
+
+    # drain the swap; post-promotion decode re-traces (new plane
+    # constants) but still only ever lowers the kernel path
+    while sched.swap_in_flight:
+        sched.step()
+    sched.step()
+    assert eng.path_calls["reference"] == before["reference"]
 
 
 if HAVE_HYPOTHESIS:
