@@ -20,6 +20,14 @@ Three measurements, all on the CI smoke transformer:
 CLI: ``python benchmarks/multiplex_bench.py --json
 BENCH_multiplex_smoke.json`` (the CI bench-lane multiplex smoke; exits
 nonzero if an acceptance figure fails).
+
+``--planebank`` runs the 3-tenant plane-bank smoke instead
+(``BENCH_planebank.json``): three checkpoints resident in one executor's
+3-plane banks (``DeviceConfig(stack_planes=3)``), streams bit-identical
+to three dedicated schedulers at 1.0x physical devices (vs 3.0x
+dedicated), a tenant-C in-place swap under A+B traffic dropping zero
+requests, and 2:1:1 QoS weights shifting served-token shares within
++-10 %.
 """
 from __future__ import annotations
 
@@ -38,6 +46,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import get_config  # noqa: E402
+from repro.core.device import DeviceConfig  # noqa: E402
 from repro.core.engine import EngineConfig  # noqa: E402
 from repro.core.quant import QuantConfig  # noqa: E402
 from repro.models.model import build_model  # noqa: E402
@@ -178,20 +187,167 @@ def accepted(res) -> bool:
             and res["sustains_2x_during_swap"])
 
 
+# -- 3-tenant plane-bank smoke -------------------------------------------------
+
+def bench_planebank(quick: bool = False):
+    """Three checkpoints resident in one executor's 3-plane banks vs
+    three dedicated deployments, plus a tenant-C in-place swap under A+B
+    traffic and a QoS-share measurement at 2:1:1 weights."""
+    n_fid, max_fid = (1, 3) if quick else (2, 4)
+    n_swp, max_swp = (1, 6) if quick else (2, 8)
+    n_qos, max_qos, qos_steps = (12, 3, 5) if quick else (24, 3, 8)
+    cfg = dataclasses.replace(
+        _crossbar_cfg(),
+        xbar=dataclasses.replace(_XBAR, device=DeviceConfig(stack_planes=3)))
+    params = {"A": build_model(cfg).init(jax.random.PRNGKey(0))}
+    params["B"] = finetune_delta(params["A"], scale=0.04, seed=11)
+    params["C"] = finetune_delta(params["A"], scale=0.06, seed=19)
+    rids_fid = {t: range(100 * i, 100 * i + n_fid)
+                for i, t in enumerate("ABC")}
+    rids_swp = {t: range(500 + 100 * i, 500 + 100 * i + n_swp)
+                for i, t in enumerate("AB")}
+
+    # -- dedicated trio: one executor (one full 3-plane stack) per ckpt ----
+    t0 = time.perf_counter()
+    ded_out, devices_dedicated = {}, 0
+    for t in "ABC":
+        model_d = build_model(cfg)
+        sched_d = BatchScheduler(model_d, params[t], _N_SLOTS, _MAX_LEN)
+        _submit(sched_d, "A", rids_fid[t], cfg.vocab, max_fid)
+        n = n_fid
+        if t in rids_swp:       # the swap-phase reference streams ride along
+            _submit(sched_d, "A", rids_swp[t], cfg.vocab, max_swp)
+            n += n_swp
+        ded_out.update(_drain(sched_d, n))
+        devices_dedicated += model_d.executor.n_devices_physical
+    wall_dedicated = time.perf_counter() - t0
+
+    # -- multiplexed: all three resident in ONE executor's plane banks -----
+    t0 = time.perf_counter()
+    model_m = build_model(cfg)
+    sched_m = BatchScheduler(
+        model_m, params["A"], 4, _MAX_LEN,
+        tenants={"A": (params["A"], 2.0), "B": (params["B"], 1.0),
+                 "C": (params["C"], 1.0)})
+    for t in "ABC":
+        _submit(sched_m, t, rids_fid[t], cfg.vocab, max_fid)
+    out_m = _drain(sched_m, 3 * n_fid)
+    wall_multiplexed = time.perf_counter() - t0
+    devices_mux = model_m.executor.n_devices_physical
+    streams_identical = all(out_m[r] == ded_out[r]
+                            for t in "ABC" for r in rids_fid[t])
+    device_ratio = devices_dedicated / devices_mux
+    slot_quota = {t: q["slots"] for t, q in sched_m.qos_report().items()}
+
+    # -- tenant-C in-place swap under A+B traffic --------------------------
+    params_c2 = finetune_delta(params["A"], scale=0.09, seed=23)
+    for t in "AB":
+        _submit(sched_m, t, rids_swp[t], cfg.vocab, max_swp)
+    for _ in range(2):
+        sched_m.step()
+    hs = sched_m.begin_hot_swap(params_c2, chunks_per_step=1, tenant="C")
+    n_chunks = hs.plan.total_chunks
+    hs.chunks_per_step = max(1, -(-n_chunks // max(2 * max_swp - 4, 1)))
+    t0 = time.perf_counter()
+    out_swap = _drain(sched_m, 2 * n_swp)
+    while sched_m.swap_in_flight:           # pace out any tail chunks
+        sched_m.step()
+    wall_swap = time.perf_counter() - t0
+    rep = sched_m.swap_history[0]
+    ab_unperturbed = all(out_swap[r] == ded_out[r]
+                         for t in "AB" for r in rids_swp[t])
+    zero_dropped = (len(out_swap) == 2 * n_swp
+                    and all(len(out_swap[r]) == max_swp
+                            for t in "AB" for r in rids_swp[t]))
+
+    # -- QoS: 2:1:1 weights must shift served-token shares -----------------
+    base = {t: q["tokens_served"] for t, q in sched_m.qos_report().items()}
+    for i, t in enumerate("ABC"):
+        _submit(sched_m, t, range(900 + 100 * i, 900 + 100 * i + n_qos),
+                cfg.vocab, max_qos)
+    for _ in range(qos_steps):              # all lanes saturated
+        sched_m.step()
+    served = {t: q["tokens_served"] - base[t]
+              for t, q in sched_m.qos_report().items()}
+    total = sum(served.values())
+    shares = {t: served[t] / total for t in served}
+    qos_ok = (abs(shares["A"] - 0.5) <= 0.10
+              and abs(shares["B"] - 0.25) <= 0.10
+              and abs(shares["C"] - 0.25) <= 0.10)
+
+    return {
+        "us_per_call": wall_multiplexed * 1e6,
+        "stack_planes": 3,
+        "tenants": model_m.executor.tenants,
+        "wall_dedicated_trio_s": wall_dedicated,
+        "wall_multiplexed_s": wall_multiplexed,
+        "wall_c_swap_under_ab_s": wall_swap,
+        "streams_bit_identical_to_dedicated": bool(streams_identical),
+        "devices_physical_dedicated_trio": devices_dedicated,
+        "devices_physical_multiplexed": devices_mux,
+        "device_count_ratio_dedicated_over_mux": device_ratio,
+        "qos_weights": {"A": 2.0, "B": 1.0, "C": 1.0},
+        "qos_slot_quota": slot_quota,
+        "qos_served_token_shares": shares,
+        "qos_shares_within_10pct": bool(qos_ok),
+        "c_swap_mode": rep["swap_mode"],
+        "c_swap_n_chunks": n_chunks,
+        "c_swap_zero_dropped_ab_requests": bool(zero_dropped),
+        "c_swap_ab_streams_unperturbed": bool(ab_unperturbed),
+        "c_swap_decode_steps_during": rep["decode_steps_during_swap"],
+        "throughput_ratio_overlap_vs_stop_world":
+            rep["throughput_ratio_overlap_vs_stop_world"],
+        "sustains_2x_during_swap": rep["sustains_2x_during_swap"],
+    }
+
+
+def planebank_accepted(res) -> bool:
+    return (res["streams_bit_identical_to_dedicated"]
+            and res["device_count_ratio_dedicated_over_mux"] == 3.0
+            and res["c_swap_zero_dropped_ab_requests"]
+            and res["c_swap_ab_streams_unperturbed"]
+            and res["c_swap_mode"] == "in_place"
+            and res["qos_shares_within_10pct"])
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--json", default="BENCH_multiplex_smoke.json")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--planebank", action="store_true",
+                    help="run the 3-tenant plane-bank smoke instead of "
+                         "the 2-tenant multiplex smoke")
     args = ap.parse_args(argv)
-    res = bench_multiplex(quick=True)
+    name = "planebank_3tenant" if args.planebank else \
+        "multiplex_plane_sharing"
+    json_path = args.json or ("BENCH_planebank.json" if args.planebank
+                              else "BENCH_multiplex_smoke.json")
+    bench = bench_planebank if args.planebank else bench_multiplex
+    res = bench(quick=True)
     print("name,us_per_call,derived")
     derived = {k: v for k, v in res.items() if k != "us_per_call"}
-    print(f"multiplex_plane_sharing,{res['us_per_call']:.1f},"
+    print(f"{name},{res['us_per_call']:.1f},"
           f"{json.dumps(derived, default=float)}")
     from benchmarks.meta import append_trajectory, write_stamped
-    results = {"multiplex_plane_sharing": res}
-    meta = write_stamped(results, args.json, lane="multiplex-smoke")
+    results = {name: res}
+    meta = write_stamped(results, json_path,
+                         lane="planebank-smoke" if args.planebank
+                         else "multiplex-smoke")
     append_trajectory(meta, results)
-    print(f"# wrote {args.json} (sha={meta['git_sha'][:12]})")
+    print(f"# wrote {json_path} (sha={meta['git_sha'][:12]})")
+    if args.planebank:
+        ok = planebank_accepted(res)
+        sh = res["qos_served_token_shares"]
+        print(f"# acceptance: 3 streams bit-identical "
+              f"{res['streams_bit_identical_to_dedicated']}, device ratio "
+              f"{res['device_count_ratio_dedicated_over_mux']:.1f}x "
+              f"dedicated vs 1.0x banked, C-swap "
+              f"[{res['c_swap_mode']}] under A+B dropped zero "
+              f"({res['c_swap_zero_dropped_ab_requests']}) with A/B "
+              f"unperturbed ({res['c_swap_ab_streams_unperturbed']}), "
+              f"QoS 2:1:1 shares A={sh['A']:.2f} B={sh['B']:.2f} "
+              f"C={sh['C']:.2f} within 10% "
+              f"({res['qos_shares_within_10pct']})")
+        return 0 if ok else 1
     ok = accepted(res)
     print(f"# acceptance: streams bit-identical "
           f"{res['streams_bit_identical_to_dedicated']}, device ratio "

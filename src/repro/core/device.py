@@ -13,12 +13,43 @@ Everything is pure JAX (lax.scan transients, vmappable over device arrays).
 from __future__ import annotations
 
 import dataclasses
+import string
 from functools import partial
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.timing import PAPER, CrossStackParams
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceConfig:
+    """Vertical geometry of one crossbar cell site.
+
+    The paper's 10x10x2 array stacks exactly two TiO2/TiO2-x planes per
+    cell; ``stack_planes`` generalizes that height so the same serving
+    stack can model taller monolithic stacks (N resident checkpoints, or
+    N-1 residents plus a free staging plane for zero-pause hot-swaps).
+    The default of 2 keeps every seed geometry and paper figure
+    unchanged: a 2-plane stack is exactly the classic ping-pong pair.
+    """
+    stack_planes: int = 2
+
+    def __post_init__(self):
+        if self.stack_planes < 2:
+            raise ValueError(
+                f"stack_planes must be >= 2 (a read plane plus at least "
+                f"one write/twin plane); got {self.stack_planes}")
+
+    @property
+    def tenant_names(self) -> Tuple[str, ...]:
+        """One addressable tenant name per plane slot: "A", "B", "C", ...
+        (the bank can host at most ``stack_planes`` resident checkpoints,
+        one per plane)."""
+        letters = string.ascii_uppercase
+        return tuple(letters[i] if i < len(letters) else f"T{i}"
+                     for i in range(self.stack_planes))
 
 
 @dataclasses.dataclass(frozen=True)

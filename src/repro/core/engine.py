@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant
+from repro.core.device import DeviceConfig
 from repro.core.quant import QuantConfig
 from repro.core.timing import PAPER, CrossStackParams
 from repro.core import ir_drop
@@ -47,11 +48,17 @@ class EngineConfig:
     swap_leakage: bool = False         # perturb reads with write-plane
     # leakage while a hot-swap is in flight (fidelity studies; breaks
     # bit-exactness of mid-swap reads by at most the ADC residual)
+    device: DeviceConfig = DeviceConfig()  # vertical stack geometry
 
     @property
     def rows_per_adc(self) -> int:
         """Rows summed in analog before one ADC conversion."""
         return 2 * self.tile_rows if self.mode == "expansion" else self.tile_rows
+
+    @property
+    def stack_planes(self) -> int:
+        """Planes stacked per cell site (the bank height N)."""
+        return self.device.stack_planes
 
 
 @jax.tree_util.register_pytree_node_class

@@ -28,26 +28,30 @@ meaningless (params are tracers).  The crossbar backend therefore runs the
 unrolled layer loop (``scan_layers=False`` path) — layer indices must be
 Python ints to name tiles.
 
-Deep-net-mode serving (PR 2): every resident weight is a
-:class:`~repro.core.planes.PlanePair` — a read-active plane plus a
-write-shadow twin.  :meth:`begin_swap` stages a new params tree onto the
-shadow planes in write-latency-costed chunks (:meth:`write_chunks`, meant
-to interleave with decode steps), and :meth:`promote` flips every pair
-atomically after verifying per-tile fingerprints — zero-downtime weight
-hot-swap, the paper's read-under-write overlap at the serving tier.
-
-Multi-tenant plane multiplexing (PR 3): the twin planes can instead hold
-a *second resident checkpoint*.  ``program_params(params, tenant="B")``
-deploys tenant B onto the twin slot of every pair, per-tenant
-fingerprints/versions address each checkpoint independently, and
+Plane-bank residency (PR 5, generalizing PRs 2-3): every resident weight
+is a :class:`~repro.core.planes.PlaneBank` — an ordered bank of
+``DeviceConfig.stack_planes`` role-tagged plane slots (``free`` /
+``staging`` / ``resident(tenant)``).  The executor keeps a single
+residency registry over the banks: ``program_params(params, tenant=...)``
+deploys any of up to N resident checkpoints (one per plane),
+:meth:`residency` reports ``{tenant: fingerprint/version}``, and
 ``linear(..., tenant=...)`` (or the ambient :meth:`read_tenant` scope a
-serving loop jits under) selects the plane per pair — two models served
-from ONE physical stack, the paper's user-reconfigurable plane pair as a
-serving-tier analogue of PUMA's many-workload fabric.
-``begin_swap(params, tenant="B")`` reprograms B's planes in t_write
-chunks while tenant A keeps decoding: the same read-under-write overlap,
-re-purposed for multi-tenancy (B's reads pause for the write window; the
-new planes land atomically at :meth:`promote`).
+serving loop jits under) selects the tenant's plane per bank — N models
+served from ONE physical stack, the paper's user-reconfigurable stack as
+a serving-tier analogue of PUMA's many-workload fabric.
+
+:meth:`begin_swap` targets any tenant with one lifecycle: when a free
+plane exists, a **staged** swap reserves it per bank, programs the new
+checkpoint in write-latency-costed chunks (:meth:`write_chunks`, meant
+to interleave with decode steps), and :meth:`promote` retargets the
+tenant's read-enable atomically after verifying per-tile fingerprints —
+the tenant serves its old plane through the whole window (zero-downtime
+hot-swap, the paper's read-under-write overlap at the serving tier).
+When the bank is full, the swap falls back to an **in-place** rewrite of
+the tenant's own slot: that tenant's reads pause for the window while
+every other resident tenant keeps serving.  With ``stack_planes = 2``
+these two configurations are exactly the PR-2 shadow swap and the PR-3
+two-tenant multiplex — one code path, not two special cases.
 """
 from __future__ import annotations
 
@@ -61,7 +65,7 @@ import jax.numpy as jnp
 
 from repro.core import engine, planes
 from repro.core.engine import EngineConfig
-from repro.core.planes import ChunkedProgram, PlanePair, SwapPlan
+from repro.core.planes import ChunkedProgram, PlaneBank, SwapPlan
 
 # weight-leaf classification: final path key -> contracted input axes,
 # in the context of its parent module key
@@ -101,12 +105,9 @@ class CrossbarExecutor:
     """Programs a model's linear weights onto crossbar tiles exactly once
     and serves all subsequent ``x @ W`` reads from the resident tiles."""
 
-    #: the two plane slots bound the tenant population
-    TENANTS = ("A", "B")
-
     def __init__(self, cfg: EngineConfig = EngineConfig(mode="deepnet")):
         self.cfg = cfg
-        self._cache: Dict[str, PlanePair] = {}
+        self._cache: Dict[str, PlaneBank] = {}
         self._n_in: Dict[str, int] = {}
         # per tenant, the leaf arrays its planes were programmed from:
         # resident conductances are physical state, so serving a DIFFERENT
@@ -134,11 +135,29 @@ class CrossbarExecutor:
 
     # -- tenant addressing ----------------------------------------------------
 
+    @property
+    def stack_planes(self) -> int:
+        """Bank height N: planes stacked per cell site (and the bound on
+        the resident tenant population)."""
+        return self.cfg.stack_planes
+
+    @property
+    def tenant_names(self):
+        """The addressable tenant population, one name per plane slot."""
+        return self.cfg.device.tenant_names
+
+    @property
+    def anchor(self) -> str:
+        """The registry's anchor tenant (first name, "A"): required by
+        the serving tier, never evictable, and never paused by an
+        in-place rewrite — its deploys must go through staged swaps."""
+        return self.tenant_names[0]
+
     def _check_tenant(self, tenant: str) -> str:
-        if tenant not in self.TENANTS:
+        if tenant not in self.tenant_names:
             raise ValueError(
-                f"unknown tenant {tenant!r}: a stacked pair holds exactly "
-                f"two plane sets, tenants {self.TENANTS}")
+                f"unknown tenant {tenant!r}: a {self.stack_planes}-plane "
+                f"stack serves at most tenants {self.tenant_names}")
         return tenant
 
     def _resolve_tenant(self, tenant: Optional[str]) -> str:
@@ -161,6 +180,15 @@ class CrossbarExecutor:
     def tenants(self) -> List[str]:
         """Resident tenants (those with a programmed plane set)."""
         return sorted(self._programmed_leaves)
+
+    def residency(self) -> Dict[str, Dict[str, Any]]:
+        """The unified residency registry: for every resident tenant, the
+        checkpoint-content fingerprint its planes were programmed from
+        and its monotone deploy version — the one structure dashboards,
+        schedulers and swap tooling read instead of poking bank slots."""
+        return {t: {"fingerprint": self.fingerprint(tenant=t),
+                    "version": self.version(t)}
+                for t in self.tenants}
 
     # -- write-plane leakage (deep-net overlap reads) ------------------------
 
@@ -217,21 +245,15 @@ class CrossbarExecutor:
         """Program every eligible linear weight in ``params`` onto the
         named tenant's plane set; idempotent per tenant.
 
-        Tenant "A" (the default) programs the read-active planes; tenant
-        "B" deploys a second resident checkpoint onto the twin planes —
-        the pairs then multiplex two models from one physical stack.
-        Returns the number of weights *newly* programmed this walk;
-        weights already resident count as ``stats['cache_hits']``.
+        A new tenant claims one free plane slot in every bank (up to the
+        ``stack_planes`` bound); the banks then multiplex the resident
+        checkpoints from one physical stack.  Returns the number of
+        weights *newly* programmed this walk; weights already resident
+        count as ``stats['cache_hits']``.
         """
         tenant = self._resolve_tenant(tenant)
-        if self._swap is not None and tenant not in self._programmed_leaves:
-            # a first-time tenant claims the twin slots — the very planes
-            # an in-flight tenant-A swap will flip at promote(); admitting
-            # it here would make that promotion fail half-applied
-            raise RuntimeError(
-                f"cannot deploy new tenant {tenant!r} while a hot-swap is "
-                f"in flight (the twin planes are the swap's write "
-                f"target); promote() or abort_swap() first")
+        if tenant not in self._programmed_leaves:
+            self._require_free_plane(tenant)
         leaves = jax.tree_util.tree_flatten_with_path(params)[0]
         if any(isinstance(w, jax.core.Tracer) for _, w in leaves):
             raise TypeError(
@@ -255,25 +277,46 @@ class CrossbarExecutor:
             self._versions[tenant] = self._versions.get(tenant, 0) + 1
         return new
 
+    def _require_free_plane(self, tenant: str) -> None:
+        """A first-time tenant needs one free slot per bank.  Resident
+        tenants and an in-flight staged swap's reserved slot all occupy
+        planes; admitting a tenant past the bound would either overflow
+        the stack or steal the very plane an open swap will land on at
+        promote() (making that promotion fail half-applied)."""
+        staging = self._swap is not None and not self._swap.in_place
+        occupied = len(self._programmed_leaves) + (1 if staging else 0)
+        if occupied < self.stack_planes:
+            return
+        if staging:
+            raise RuntimeError(
+                f"cannot deploy new tenant {tenant!r} while a hot-swap is "
+                f"in flight (the staging plane is the swap's write "
+                f"target); promote() or abort_swap() first")
+        raise RuntimeError(
+            f"stack is full: {self.stack_planes} planes hold resident "
+            f"tenants {self.tenants}; evict_tenant() before deploying "
+            f"{tenant!r}")
+
     def _program_one(self, name: str, w: jax.Array, n_in: int,
                      tenant: str) -> int:
-        pair = self._cache.get(name)
-        if pair is not None and pair.has_tenant(tenant):
+        bank = self._cache.get(name)
+        if bank is not None and bank.has_tenant(tenant):
             self.stats["cache_hits"] += 1
             return 0
         k = math.prod(w.shape[:n_in])
         w2d = jnp.asarray(w, jnp.float32).reshape(k, -1)
-        if pair is None:
-            pair = self._cache[name] = PlanePair(name)
+        if bank is None:
+            bank = self._cache[name] = PlaneBank(
+                name, n_planes=self.stack_planes)
             self._n_in[name] = n_in
         else:
-            ref = pair.any_plane
+            ref = bank.any_plane
             if (w2d.shape[0], w2d.shape[1]) != (ref.k, ref.n):
                 raise ValueError(
                     f"{name}: tenant {tenant!r} weight shape "
-                    f"{w2d.shape} != the pair's tile geometry "
+                    f"{w2d.shape} != the bank's tile geometry "
                     f"{(ref.k, ref.n)}; tenants share physical stacks")
-        pair.assign(tenant, engine.program(w2d, self.cfg),
+        bank.assign(tenant, engine.program(w2d, self.cfg),
                     planes.fingerprint_weight(w2d))
         self.stats["programmed"] += 1
         return 1
@@ -324,7 +367,7 @@ class CrossbarExecutor:
         """Resident-tile execution of ``x @ W`` for the named weight.
 
         ``w`` is only consulted for its (static) shape — the arithmetic
-        reads the named tenant's plane of the pair (default: the ambient
+        reads the named tenant's plane of the bank (default: the ambient
         :meth:`read_tenant` scope, i.e. tenant "A" unless a serving lane
         set otherwise).  While a hot-swap is in flight and
         ``cfg.swap_leakage`` is set, reads carry the write plane's
@@ -409,13 +452,17 @@ class CrossbarExecutor:
     def begin_swap(self, params: Any, tenant: str = "A") -> SwapPlan:
         """Stage ``params`` for chunked programming of a plane set.
 
-        ``tenant="A"`` (the default) is the classic shadow swap: the
-        free twin planes are written and an atomic flip promotes them.
-        ``tenant="B"`` targets the twin slot directly — either a live
-        deploy of a second resident checkpoint or an in-place reprogram
-        of tenant B's planes while tenant A keeps serving (the paper's
-        read-under-write overlap re-purposed for multi-tenancy; B's own
-        reads pause until :meth:`promote`).
+        One lifecycle for every tenant.  When the banks have a free
+        plane, the swap is **staged**: a staging slot is reserved per
+        bank, the new checkpoint programs into it chunk by chunk, and
+        promotion retargets the tenant's read-enable atomically — the
+        tenant (resident or a first-time live deploy) never stops
+        serving.  When the banks are full, a resident non-anchor tenant
+        falls back to an **in-place** rewrite of its own slot: its reads
+        pause until :meth:`promote` while every other tenant keeps
+        serving (the paper's read-under-write overlap re-purposed for
+        multi-tenancy).  The anchor tenant's reads never pause, so its
+        swaps require a free plane.
 
         The incoming tree must carry exactly the resident tile set with
         matching shapes (a new checkpoint, fine-tuned delta, or
@@ -430,15 +477,24 @@ class CrossbarExecutor:
         if self._swap is not None:
             raise RuntimeError("a hot-swap is already in flight; promote() "
                                "or abort_swap() first")
-        if tenant == "A":
-            occupied = sorted({p.twin_tenant for p in self._cache.values()
-                               if p.twin_resident})
-            if occupied:
+        resident = tenant in self._programmed_leaves
+        n_free = min(bank.n_free for bank in self._cache.values())
+        if n_free == 0:
+            others = sorted(t for t in self._programmed_leaves
+                            if t != tenant)
+            if not resident:
                 raise RuntimeError(
-                    f"tenant 'A' has no free write plane: the twin slot "
-                    f"holds tenant(s) {occupied}; swap that tenant "
-                    f"(begin_swap(..., tenant={occupied[0]!r})) or "
-                    f"evict_tenant() first")
+                    f"cannot live-deploy tenant {tenant!r}: stack is full "
+                    f"({self.stack_planes} planes hold tenant(s) "
+                    f"{others}); evict_tenant() first")
+            if tenant == self.anchor:
+                raise RuntimeError(
+                    f"tenant {tenant!r} has no free write plane: the "
+                    f"{self.stack_planes}-plane stack also holds "
+                    f"tenant(s) {others}, and the anchor tenant cannot "
+                    f"pause for an in-place rewrite; swap or evict one "
+                    f"of {others} first")
+        in_place = resident and n_free == 0
         leaves = jax.tree_util.tree_flatten_with_path(params)[0]
         if any(isinstance(w, jax.core.Tracer) for _, w in leaves):
             raise TypeError("begin_swap needs concrete arrays (eager, "
@@ -461,8 +517,14 @@ class CrossbarExecutor:
         if missing:
             raise ValueError(
                 f"swap tree is missing resident tiles: {sorted(missing)}")
+        if not in_place:
+            # reserve the write target up front (all validation passed):
+            # the staging role keeps a concurrent new-tenant deploy from
+            # claiming the very plane this swap lands on at promote()
+            for bank in self._cache.values():
+                bank.reserve_staging()
         self._swap = SwapPlan(programs, tuple(w for _, w in leaves), params,
-                              tenant=tenant, in_place=(tenant != "A"))
+                              tenant=tenant, in_place=in_place)
         return self._swap
 
     def write_chunks(self, n: int = 1) -> int:
@@ -491,9 +553,10 @@ class CrossbarExecutor:
         independent one-shot programming when its last chunk landed
         (``ChunkedProgram.verify``); this gate checks completeness and
         ownership — every tile must have been staged by THIS plan, not a
-        stale or foreign one — before any pair changes, so a read can
-        never observe a mixed-plane state.  A tenant-"A" plan flips every
-        pair to its shadow; an in-place tenant plan rewrites that
+        stale or foreign one — before any bank changes, so a read can
+        never observe a mixed-plane state.  A staged plan lands every
+        bank's staging slot and retargets the tenant's read-enable (its
+        previous slot reverts to free); an in-place plan rewrites the
         tenant's own slot (and un-pauses its reads).  Returns the
         promoted params tree (the caller serves embeddings/norms from
         it).
@@ -512,13 +575,12 @@ class CrossbarExecutor:
                     f"{got[1] if got else None} != checkpoint {fp}; "
                     f"refusing to promote")
         for cp in plan.programs:
-            pair = self._cache[cp.name]
+            bank = self._cache[cp.name]
             pw, fp = plan.staged[cp.name]
             if plan.in_place:
-                pair.assign(plan.tenant, pw, fp)
+                bank.assign(plan.tenant, pw, fp)
             else:
-                pair.stage(pw, fp)
-                pair.flip()
+                bank.land_staged(plan.tenant, pw, fp)
         self._programmed_leaves[plan.tenant] = plan.leaves
         self._versions[plan.tenant] = self._versions.get(plan.tenant, 0) + 1
         self.stats["swaps"] += 1
@@ -528,7 +590,11 @@ class CrossbarExecutor:
     def abort_swap(self) -> None:
         """Drop an in-flight swap; every tenant's resident planes keep
         serving (written-and-verified planes are buffered in the plan and
-        never touch a pair before promote, so abort is pure discard)."""
+        never touch a bank before promote, so abort is pure discard —
+        a staged plan's reserved slots simply revert to free)."""
+        if self._swap is not None and not self._swap.in_place:
+            for bank in self._cache.values():
+                bank.release_staging()
         self._swap = None
 
     def swap(self, params: Any, chunk_burst: int = 64,
@@ -550,21 +616,31 @@ class CrossbarExecutor:
                 "programmed_version": self.version(tenant)}
 
     def evict_tenant(self, tenant: str) -> None:
-        """Clear a twin-resident tenant; its slot reverts to a free
-        write-shadow (tenant "A" anchors the pairs and cannot be
-        evicted — reprogram it via swap instead)."""
+        """Evict a resident tenant; its slot in every bank reverts to
+        free (the anchor tenant cannot be evicted — reprogram it via
+        swap instead).
+
+        Refused outright while ANY :class:`SwapPlan` is in flight: every
+        plan targets the same weight set the banks hold, and changing
+        the residency registry mid-swap is exactly the race the old
+        ``clear_twin`` API allowed (it silently discarded an in-flight
+        staged shadow).  ``promote()`` or ``abort_swap()`` first.
+        """
         self._check_tenant(tenant)
-        if tenant == "A":
-            raise ValueError("tenant 'A' anchors the plane pairs; "
-                             "swap(params) to replace its weights")
-        if self._swap is not None and self._swap.tenant == tenant:
-            raise RuntimeError(f"tenant {tenant!r} has a swap in flight; "
-                               f"promote() or abort_swap() first")
+        if tenant == self.anchor:
+            raise ValueError(
+                f"tenant {tenant!r} anchors the plane banks; "
+                f"swap(params) to replace its weights")
+        if self._swap is not None:
+            raise RuntimeError(
+                f"cannot evict tenant {tenant!r}: a swap plan is in "
+                f"flight over this stack's weights; promote() or "
+                f"abort_swap() first")
         if tenant not in self._programmed_leaves:
             return
-        for pair in self._cache.values():
-            if pair.twin_tenant == tenant:
-                pair.clear_twin(tenant)
+        for bank in self._cache.values():
+            if bank.has_tenant(tenant):
+                bank.evict(tenant)
         del self._programmed_leaves[tenant]
 
     # -- bookkeeping ---------------------------------------------------------
@@ -576,14 +652,15 @@ class CrossbarExecutor:
     @property
     def n_devices(self) -> int:
         """Programmed memristors serving reads (read-active planes) —
-        the same quantity reported before plane pairing, so bench
+        the same quantity reported before plane banking, so bench
         trajectories stay comparable."""
-        return sum(pair.n_devices for pair in self._cache.values())
+        return sum(bank.n_devices for bank in self._cache.values())
 
     @property
     def n_devices_physical(self) -> int:
-        """Total memristors in the stacks, write-shadow twins included."""
-        return sum(pair.n_devices_physical for pair in self._cache.values())
+        """Total memristors in the stacks, all plane slots included."""
+        return sum(bank.n_devices_physical
+                   for bank in self._cache.values())
 
     @contextlib.contextmanager
     def activate(self):

@@ -27,10 +27,27 @@ from repro.core.crossbar import PlaneConfig
 
 
 class StackState(NamedTuple):
-    """A stacked pair of conductance planes plus which one is read-active."""
+    """A stacked pair of conductance planes plus which one is read-active.
+
+    The N = 2 special case of :class:`BankState`; kept as the named shape
+    the paper's figures (and the expansion-mode ops below) speak in.
+    """
     g_top: jax.Array       # (r, m)
     g_bot: jax.Array       # (r, m)
     read_top: jax.Array    # bool scalar — deep-net ping-pong selector
+
+
+class BankState(NamedTuple):
+    """An N-high stack of conductance planes plus the read-active index.
+
+    Generalizes :class:`StackState` (g_top, g_bot, read_top) to the
+    plane-bank geometry of ``DeviceConfig.stack_planes``: one plane
+    serves reads while any of the other N-1 planes may be programmed.
+    ``read_idx`` may be a traced scalar, so a jitted serving loop can
+    rotate the ring without re-lowering.
+    """
+    g: jax.Array           # (N, r, m) conductance planes
+    read_idx: jax.Array    # int32 scalar — which plane is read-active
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,3 +128,73 @@ def deepnet_layer(state: StackState, v_in: jax.Array, g_next: jax.Array,
     i = deepnet_read(state, v_in, cfg)
     state = deepnet_write_inactive(state, g_next)
     return i, deepnet_swap(state)
+
+
+# -- N-plane banks (DeviceConfig.stack_planes > 2) ----------------------------
+
+def bank_from_pair(state: StackState) -> BankState:
+    """Lift a 2-plane StackState into the bank representation (plane 0 =
+    top, plane 1 = bottom; read_idx 0 <=> read_top)."""
+    g = jnp.stack([state.g_top, state.g_bot], axis=0)
+    idx = jnp.where(state.read_top, 0, 1).astype(jnp.int32)
+    return BankState(g, idx)
+
+
+def bank_write_idx(state: BankState) -> jax.Array:
+    """The ring's next write target: the plane after the read-active one
+    (for N = 2 this is exactly the classic inactive/shadow plane)."""
+    return (state.read_idx + 1) % state.g.shape[0]
+
+
+def bank_read(state: BankState, v_in: jax.Array, cfg: StackConfig,
+              n_writing: int = 1, v_write_other: jax.Array | None = None,
+              include_leakage: bool = True) -> jax.Array:
+    """Read the active plane of an N-high bank while ``n_writing`` other
+    planes are being programmed.
+
+    Each concurrently writing plane contributes one N1 subthreshold
+    leakage term into the shared column (paper Fig. 3c); planes that are
+    merely resident (RE floating low, no write drive) contribute nothing.
+    ``bank_read(bank_from_pair(s), ...)`` is bit-exact with
+    :func:`deepnet_read` on ``s``.
+    """
+    g_read = jnp.take(state.g, state.read_idx, axis=0)
+    i = crossbar.mac(v_in, g_read, cfg.plane)
+    if include_leakage and n_writing > 0:
+        if v_write_other is None:
+            v_write_other = jnp.full((cfg.rows_per_plane,),
+                                     cfg.params.v_write)
+        i = i + n_writing * crossbar.write_plane_leakage(
+            v_write_other, cfg.plane)
+    return i
+
+
+def bank_write_plane(state: BankState, idx: jax.Array,
+                     g_new: jax.Array) -> BankState:
+    """Program plane ``idx`` of the bank (RE low on that plane only).
+    ``idx`` may be traced; writing the read-active plane is the caller's
+    bug — executor-scale code refuses it (reads pause for in-place
+    swaps), the array-scale op does not police it."""
+    n = state.g.shape[0]
+    mask = (jnp.arange(n) == idx)[:, None, None]
+    return BankState(jnp.where(mask, g_new[None], state.g), state.read_idx)
+
+
+def bank_set_read(state: BankState, idx: jax.Array) -> BankState:
+    """Point the read-enable at plane ``idx`` (the generalized RE flip:
+    promotion retargets the read to whichever plane was just staged)."""
+    return BankState(state.g, jnp.asarray(idx, jnp.int32))
+
+
+def bank_advance(state: BankState) -> BankState:
+    """Rotate the ring one position (N = 2: exactly ``deepnet_swap``)."""
+    return bank_set_read(state, bank_write_idx(state))
+
+
+def bank_layer(state: BankState, v_in: jax.Array, g_next: jax.Array,
+               cfg: StackConfig) -> tuple[jax.Array, BankState]:
+    """One deep-net beat on an N-high bank: read the active plane, write
+    the next-layer weights into the ring's next plane, advance."""
+    i = bank_read(state, v_in, cfg)
+    state = bank_write_plane(state, bank_write_idx(state), g_next)
+    return i, bank_advance(state)

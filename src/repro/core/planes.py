@@ -1,17 +1,21 @@
-"""Ping-pong tile planes: ``modes.StackState`` lifted to executor scale.
+"""Plane banks: ``modes.BankState`` lifted to executor scale.
 
-The paper's deep-net mode pairs every crossbar plane with a stacked twin
-behind complementary RE signals: one plane serves reads while the other is
-programmed, and an RE flip promotes the freshly written plane without ever
-interrupting the read stream (paper §III-B).  ``modes.py`` models that at
-the array level (two conductance matrices + a read selector); this module
-is the same state machine at the scale ``CrossbarExecutor`` operates on —
+The paper's deep-net mode stacks crossbar planes behind per-plane RE
+signals: one plane serves reads while another is programmed, and an RE
+retarget promotes the freshly written plane without ever interrupting
+the read stream (paper §III-B).  ``modes.py`` models that at the array
+level (an N-high conductance stack + a read selector); this module is
+the same state machine at the scale ``CrossbarExecutor`` operates on —
 whole ``ProgrammedLinear`` tile grids instead of single (r, m) planes:
 
-  * :class:`PlanePair` — a read-active plane and a write-shadow plane per
-    named weight, plus the content fingerprints of both planes.
+  * :class:`PlaneBank` — an ordered bank of ``stack_planes`` role-tagged
+    plane slots per named weight.  Each slot is ``free``, ``staging``
+    (reserved as the write target of an in-flight swap), or ``resident``
+    for a named tenant; the bank is the unit the executor's residency
+    registry is built from.  With ``stack_planes = 2`` and one tenant
+    the bank is exactly the paper's ping-pong pair.
   * :class:`ChunkedProgram` — incremental programming of one weight onto a
-    shadow plane, one row-tile chunk at a time.  Each chunk is one write
+    staging plane, one row-tile chunk at a time.  Each chunk is one write
     pulse of ``t_write`` in the device-time model (``core/timing.py``), so
     a serving loop can interleave chunks between decode steps exactly the
     way the paper hides writes under reads.
@@ -24,7 +28,7 @@ whole ``ProgrammedLinear`` tile grids instead of single (r, m) planes:
     common-mode term.
 
 Chunked programming is bit-exact with ``engine.program``: the assembled
-shadow plane is the same ``ProgrammedLinear`` the one-shot path builds
+staging plane is the same ``ProgrammedLinear`` the one-shot path builds
 (asserted in tests/test_hotswap.py), so a promoted swap serves exactly the
 arithmetic a cold deploy of the new weights would.
 """
@@ -63,169 +67,189 @@ def fingerprint_tiles(pw: ProgrammedLinear) -> str:
     return h.hexdigest()
 
 
+#: slot lifecycle roles: free -> staging -> resident(tenant) -> free
+ROLE_FREE = "free"
+ROLE_STAGING = "staging"
+ROLE_RESIDENT = "resident"
+
+
 @dataclasses.dataclass
-class PlanePair:
-    """A stacked pair of tile-grid planes plus which one is read-active.
+class PlaneSlot:
+    """One physical plane of a bank plus its role in the residency
+    lifecycle.  A ``resident`` slot always carries a programmed plane and
+    fingerprint; a ``staging`` slot is reserved (empty until promotion
+    lands the write-verified plane on it); a ``free`` slot is dark
+    silicon awaiting a deploy or a swap."""
+    plane: Optional[ProgrammedLinear] = None
+    fp: Optional[str] = None
+    role: str = ROLE_FREE
+    tenant: Optional[str] = None
 
-    Mirrors ``modes.StackState`` (g_top, g_bot, read_top) with whole
-    ``ProgrammedLinear`` grids in place of conductance matrices.  The
-    twin slot plays one of two roles:
 
-      * **write-shadow** (``twin_tenant is None``) — empty until a
-        hot-swap stages new weights into it; an RE flip then promotes it
-        (single-tenant deep-net serving, PR 2).
-      * **second tenant** (``twin_tenant = "B"``) — a *resident* second
-        checkpoint served concurrently from the same stack: tenant "A"
-        reads one plane, tenant "B" the other, and the pair multiplexes
-        two models onto one physical device count (the paper's
-        user-re-purposable stack, §III, applied to multi-model serving).
+@dataclasses.dataclass
+class PlaneBank:
+    """An ordered bank of N role-tagged tile-grid plane slots.
 
-    Tenant "A" always addresses the ``read_a``-selected slot (so classic
-    shadow flips keep working); any other tenant owns the complement.
+    Mirrors ``modes.BankState`` (an N-high conductance stack + a read
+    selector) with whole ``ProgrammedLinear`` grids in place of
+    conductance matrices — except that at executor scale there is one
+    read selector *per tenant*: every resident tenant owns exactly one
+    slot, and reads address the tenant, not a physical index.  The bank
+    replaces the old ``PlanePair``'s twin-slot role-juggling (one slot
+    overloaded as write-shadow *or* second tenant) with explicit roles:
+
+      * ``resident(T)`` — serves tenant T's reads (RE high for T's
+        traffic).
+      * ``staging`` — reserved write target of an in-flight
+        :class:`SwapPlan`; lands a plane only at promotion.
+      * ``free`` — unprogrammed, claimable by a new tenant or a swap.
+
+    ``stack_planes = 2`` with one tenant reproduces the classic
+    ping-pong pair (resident + free/staging); with two tenants it is the
+    PR-3 multiplex pair; taller stacks host up to N residents, or N-1
+    residents plus a staging slot for zero-pause swaps.
     """
     name: str
-    plane_a: Optional[ProgrammedLinear] = None
-    plane_b: Optional[ProgrammedLinear] = None
-    read_a: bool = True
-    fp_a: Optional[str] = None
-    fp_b: Optional[str] = None
-    twin_tenant: Optional[str] = None
+    n_planes: int = 2
+    slots: List[PlaneSlot] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if self.n_planes < 2:
+            raise ValueError(f"{self.name}: a bank needs >= 2 planes")
+        if not self.slots:
+            self.slots = [PlaneSlot() for _ in range(self.n_planes)]
+
+    # -- queries -------------------------------------------------------------
+
+    def slot_of(self, tenant: str) -> Optional[PlaneSlot]:
+        for s in self.slots:
+            if s.role == ROLE_RESIDENT and s.tenant == tenant:
+                return s
+        return None
 
     @property
-    def active(self) -> ProgrammedLinear:
-        pw = self.plane_a if self.read_a else self.plane_b
-        if pw is None:
-            raise RuntimeError(f"{self.name}: read-active plane unprogrammed")
-        return pw
-
-    @property
-    def shadow(self) -> Optional[ProgrammedLinear]:
-        return self.plane_b if self.read_a else self.plane_a
-
-    @property
-    def fingerprint(self) -> str:
-        fp = self.fp_a if self.read_a else self.fp_b
-        if fp is None:
-            raise RuntimeError(f"{self.name}: read-active plane unprogrammed")
-        return fp
-
-    @property
-    def shadow_fingerprint(self) -> Optional[str]:
-        return self.fp_b if self.read_a else self.fp_a
-
-    # -- tenant addressing ---------------------------------------------------
-
-    @property
-    def twin_resident(self) -> bool:
-        return self.twin_tenant is not None
-
-    def _tenant_reads_a(self, tenant: str) -> bool:
-        """Which physical slot the named tenant reads."""
-        if tenant == "A":
-            return self.read_a
-        if self.twin_tenant != tenant:
-            raise RuntimeError(
-                f"{self.name}: tenant {tenant!r} is not resident on the "
-                f"twin plane (twin holds {self.twin_tenant!r})")
-        return not self.read_a
+    def residents(self) -> List[str]:
+        return [s.tenant for s in self.slots if s.role == ROLE_RESIDENT]
 
     def has_tenant(self, tenant: str) -> bool:
-        if tenant == "A":
-            return (self.plane_a if self.read_a else self.plane_b) is not None
-        return self.twin_tenant == tenant
+        return self.slot_of(tenant) is not None
+
+    def _resident_slot(self, tenant: str) -> PlaneSlot:
+        s = self.slot_of(tenant)
+        if s is None:
+            raise RuntimeError(
+                f"{self.name}: tenant {tenant!r} is not resident in this "
+                f"bank (residents: {sorted(self.residents)})")
+        return s
 
     def active_for(self, tenant: str = "A") -> ProgrammedLinear:
-        pw = (self.plane_a if self._tenant_reads_a(tenant)
-              else self.plane_b)
-        if pw is None:
+        s = self._resident_slot(tenant)
+        if s.plane is None:
             raise RuntimeError(
                 f"{self.name}: tenant {tenant!r} plane unprogrammed")
-        return pw
+        return s.plane
 
     def fingerprint_for(self, tenant: str = "A") -> str:
-        fp = self.fp_a if self._tenant_reads_a(tenant) else self.fp_b
-        if fp is None:
+        s = self._resident_slot(tenant)
+        if s.fp is None:
             raise RuntimeError(
                 f"{self.name}: tenant {tenant!r} plane unprogrammed")
-        return fp
+        return s.fp
+
+    def _first(self, role: str) -> Optional[PlaneSlot]:
+        for s in self.slots:
+            if s.role == role:
+                return s
+        return None
+
+    @property
+    def n_free(self) -> int:
+        return sum(1 for s in self.slots if s.role == ROLE_FREE)
+
+    @property
+    def staging(self) -> Optional[PlaneSlot]:
+        return self._first(ROLE_STAGING)
+
+    # -- lifecycle: free -> staging -> resident -> free ----------------------
 
     def assign(self, tenant: str, pw: ProgrammedLinear, fp: str) -> None:
-        """Program ``pw`` as the named tenant's resident plane.
-
-        Tenant "A" writes the read-active slot; any other tenant claims
-        (or rewrites) the twin slot, evicting the write-shadow role.
-        """
-        if tenant == "A":
-            reads_a = self.read_a
-        else:
-            if self.twin_tenant not in (None, tenant):
-                raise RuntimeError(
-                    f"{self.name}: twin plane already holds tenant "
-                    f"{self.twin_tenant!r}")
-            self.twin_tenant = tenant
-            reads_a = not self.read_a
-        if reads_a:
-            self.plane_a, self.fp_a = pw, fp
-        else:
-            self.plane_b, self.fp_b = pw, fp
-
-    def clear_twin(self, tenant: str) -> None:
-        """Evict the twin tenant; its slot reverts to an empty shadow."""
-        if self.twin_tenant != tenant:
+        """Program ``pw`` as the named tenant's resident plane: rewrite
+        the tenant's own slot if resident, else claim a free slot."""
+        s = self.slot_of(tenant) or self._first(ROLE_FREE)
+        if s is None:
             raise RuntimeError(
-                f"{self.name}: twin plane holds {self.twin_tenant!r}, "
-                f"not {tenant!r}")
-        self.twin_tenant = None
-        self.drop_shadow()
+                f"{self.name}: bank is full — {self.n_planes} planes hold "
+                f"{sorted(self.residents)}"
+                + (" plus a staging slot" if self.staging else "")
+                + f"; evict a tenant before deploying {tenant!r}")
+        s.plane, s.fp = pw, fp
+        s.role, s.tenant = ROLE_RESIDENT, tenant
+
+    def reserve_staging(self) -> PlaneSlot:
+        """Mark a free slot as the write target of an in-flight swap (RE
+        low: column-isolated while chunks program)."""
+        if self.staging is not None:
+            raise RuntimeError(f"{self.name}: a staging slot is already "
+                               f"reserved (swap in flight)")
+        s = self._first(ROLE_FREE)
+        if s is None:
+            raise RuntimeError(
+                f"{self.name}: no free plane to stage into — "
+                f"{self.n_planes} planes hold {sorted(self.residents)}")
+        s.role = ROLE_STAGING
+        return s
+
+    def land_staged(self, tenant: str, pw: ProgrammedLinear,
+                    fp: str) -> None:
+        """Promote a write-verified plane onto the staging slot and
+        retarget the tenant's read-enable to it (the generalized RE
+        flip); the tenant's previous slot — if any — reverts to free."""
+        s = self.staging
+        if s is None:
+            raise RuntimeError(f"{self.name}: no staging slot reserved")
+        old = self.slot_of(tenant)
+        s.plane, s.fp = pw, fp
+        s.role, s.tenant = ROLE_RESIDENT, tenant
+        if old is not None:
+            old.plane, old.fp = None, None
+            old.role, old.tenant = ROLE_FREE, None
+
+    def release_staging(self) -> None:
+        """Abort: the reserved staging slot reverts to free (written
+        chunks were buffered in the SwapPlan, never on the bank)."""
+        s = self.staging
+        if s is not None:
+            s.plane, s.fp = None, None
+            s.role, s.tenant = ROLE_FREE, None
+
+    def evict(self, tenant: str) -> None:
+        """Evict a resident tenant; its slot reverts to free."""
+        s = self._resident_slot(tenant)
+        s.plane, s.fp = None, None
+        s.role, s.tenant = ROLE_FREE, None
+
+    # -- geometry ------------------------------------------------------------
 
     @property
     def any_plane(self) -> ProgrammedLinear:
-        """Either programmed plane — the shape/tile-geometry reference."""
-        pw = self.plane_a if self.plane_a is not None else self.plane_b
-        if pw is None:
-            raise RuntimeError(f"{self.name}: no plane programmed")
-        return pw
+        """Any programmed plane — the shape/tile-geometry reference."""
+        for s in self.slots:
+            if s.plane is not None:
+                return s.plane
+        raise RuntimeError(f"{self.name}: no plane programmed")
 
     @property
     def n_devices(self) -> int:
-        """Memristors holding the weights being SERVED (the read-active
-        plane) — comparable across deploys and with the pre-plane-pair
-        counts.  The stacked twin doubles the physical device count
-        (:attr:`n_devices_physical`) whether or not it is programmed;
-        both planes share one tile geometry, so either is the count."""
+        """Memristors holding ONE plane's weights — comparable across
+        deploys and with the pre-bank counts.  Every slot shares one tile
+        geometry, so any programmed plane is the count."""
         return self.any_plane.n_devices
 
     @property
     def n_devices_physical(self) -> int:
-        return 2 * self.any_plane.n_devices
-
-    def stage(self, pw: ProgrammedLinear, fp: str) -> None:
-        """Write ``pw`` into the shadow plane (RE low: column-isolated)."""
-        if self.twin_resident:
-            raise RuntimeError(
-                f"{self.name}: no free shadow plane — the twin holds "
-                f"tenant {self.twin_tenant!r}; swap or evict that tenant")
-        if self.read_a:
-            self.plane_b, self.fp_b = pw, fp
-        else:
-            self.plane_a, self.fp_a = pw, fp
-
-    def flip(self) -> None:
-        """Promote the shadow plane (the RE swap of ``modes.deepnet_swap``)."""
-        if self.twin_resident:
-            raise RuntimeError(
-                f"{self.name}: cannot flip — the twin plane holds tenant "
-                f"{self.twin_tenant!r}, not a staged shadow")
-        if self.shadow is None:
-            raise RuntimeError(f"{self.name}: no staged shadow plane to "
-                               f"promote")
-        self.read_a = not self.read_a
-
-    def drop_shadow(self) -> None:
-        if self.read_a:
-            self.plane_b, self.fp_b = None, None
-        else:
-            self.plane_a, self.fp_a = None, None
+        """Total memristors in the stack: all ``n_planes`` planes,
+        programmed or dark."""
+        return self.n_planes * self.any_plane.n_devices
 
 
 class ChunkedProgram:
@@ -323,14 +347,17 @@ class SwapPlan:
     time is ``total_chunks * t_write`` — the quantity the overlapped
     schedule hides under the read stream.
 
-    ``tenant`` names the plane set being deployed.  The default "A" is
-    the classic shadow swap (stage the free twin, flip at promotion);
-    ``in_place`` marks a tenant-targeted swap that rewrites that
-    tenant's own resident slot — its reads pause for the swap window
-    while the *other* tenant keeps serving (read-under-write re-purposed
-    for multi-tenancy).  Fully written-and-verified planes are buffered
-    in ``staged`` and land on the pairs only at promotion, so no read —
-    either tenant's — can ever observe a partially deployed checkpoint.
+    ``tenant`` names the plane set being deployed.  A **staged** swap
+    (``in_place = False``) writes each bank's reserved staging slot and
+    retargets the tenant's read-enable at promotion — the tenant keeps
+    serving its old plane through the whole window.  ``in_place`` marks
+    the fallback when the bank has no free slot: the swap rewrites the
+    tenant's own resident slot, so that tenant's reads pause for the
+    window while every *other* resident tenant keeps serving
+    (read-under-write re-purposed for multi-tenancy).  Fully
+    written-and-verified planes are buffered in ``staged`` and land on
+    the banks only at promotion, so no read — any tenant's — can ever
+    observe a partially deployed checkpoint.
     """
     programs: List[ChunkedProgram]
     leaves: Tuple[Any, ...]        # incoming tree leaves (identity check)

@@ -16,13 +16,17 @@ flip promotes them with zero dropped requests.  SPEC is ``ft:<scale>``
 fresh init — e.g. a recalibration sweep), a checkpoint directory
 written by checkpoint/manager.py, or ``init`` (the serving params).
 
-``--multiplex SPECA,SPECB`` serves TWO checkpoints from the two tile
-planes of one crossbar executor (multi-tenant plane multiplexing):
-requests alternate between tenants A and B, each tenant decodes from its
-own resident plane set, and the physical device count is 1.0x a single
-deployment's stacks instead of the 2.0x two dedicated arrays would
-burn.  Combined with ``--hot-swap``, the swap targets tenant B: its
-planes reprogram under tenant A's uninterrupted traffic.
+``--multiplex SPEC,SPEC[,SPEC...]`` serves N checkpoints from the plane
+bank of one crossbar executor (multi-tenant plane multiplexing):
+requests round-robin across tenants A, B, C, ..., each tenant decodes
+from its own resident plane, and the physical device count is 1.0x a
+single deployment's stacks instead of the N.0x dedicated arrays would
+burn.  ``--stack-planes N`` sets the bank height (the paper's geometry
+is 2; taller stacks host more tenants and/or a free staging plane);
+``--qos W,W,...`` gives per-tenant QoS weights driving the scheduler's
+slot split and admission order.  Combined with ``--hot-swap``, the swap
+targets the LAST tenant: its planes reprogram under the other tenants'
+uninterrupted traffic.
 """
 from __future__ import annotations
 
@@ -80,11 +84,21 @@ def main(argv=None):
                     help="second checkpoint to deploy mid-serving "
                          "(ft:<scale> | seed:<int> | checkpoint dir); "
                          "requires --backend crossbar; under --multiplex "
-                         "the swap targets tenant B")
-    ap.add_argument("--multiplex", default=None, metavar="SPECA,SPECB",
-                    help="serve two checkpoints A,B from the two tile "
-                         "planes of one executor (specs as in --hot-swap, "
-                         "plus 'init'); requires --backend crossbar")
+                         "the swap targets the last tenant")
+    ap.add_argument("--multiplex", default=None,
+                    metavar="SPEC,SPEC[,SPEC...]",
+                    help="serve N checkpoints (tenants A,B,C,...) from "
+                         "the plane bank of one executor (specs as in "
+                         "--hot-swap, plus 'init'); requires --backend "
+                         "crossbar and stack-planes >= N")
+    ap.add_argument("--stack-planes", type=int, default=None,
+                    help="bank height: planes stacked per cell site "
+                         "(default: the device model's 2, the paper "
+                         "geometry)")
+    ap.add_argument("--qos", default=None, metavar="W,W[,W...]",
+                    help="per-tenant QoS weights for --multiplex (one "
+                         "float per spec, e.g. 2,1,1): weighted slot "
+                         "split + admission order in the scheduler")
     ap.add_argument("--swap-after", type=int, default=None,
                     help="begin the swap once this many requests finished "
                          "(default: half)")
@@ -101,41 +115,70 @@ def main(argv=None):
         raise SystemExit("scheduler demo targets decoder LMs; "
                          "see examples/serve_batch.py for other families")
     cfg = dataclasses.replace(cfg, backend=args.backend)
+    if args.stack_planes is not None:
+        from repro.core.device import DeviceConfig
+        cfg = dataclasses.replace(
+            cfg, xbar=dataclasses.replace(
+                cfg.xbar, device=DeviceConfig(
+                    stack_planes=args.stack_planes)))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
     tenants = None
+    tenant_ids = ["A"]
     if args.multiplex:
-        try:
-            spec_a, spec_b = args.multiplex.split(",", 1)
-        except ValueError:
-            raise SystemExit("--multiplex wants two comma-separated specs, "
-                             "e.g. init,ft:0.02")
-        tenants = {"A": resolve_swap_params(spec_a, model, params),
-                   "B": resolve_swap_params(spec_b, model, params)}
-        params = tenants["A"]
+        specs = args.multiplex.split(",")
+        if len(specs) < 2:
+            raise SystemExit("--multiplex wants >= 2 comma-separated "
+                             "specs, e.g. init,ft:0.02 or "
+                             "init,ft:0.02,seed:7")
+        names = model.executor.tenant_names
+        if len(specs) > len(names):
+            raise SystemExit(
+                f"--multiplex {len(specs)} tenants > {len(names)} plane "
+                f"slots; raise --stack-planes to {len(specs)}")
+        tenant_ids = list(names[:len(specs)])
+        weights = [1.0] * len(specs)
+        if args.qos:
+            try:
+                weights = [float(w) for w in args.qos.split(",")]
+            except ValueError:
+                raise SystemExit(f"--qos: {args.qos!r} wants floats")
+            if len(weights) != len(specs):
+                raise SystemExit(f"--qos wants one weight per "
+                                 f"--multiplex spec ({len(specs)})")
+        tenants = {
+            t: (resolve_swap_params(s, model, params), w)
+            for t, s, w in zip(tenant_ids, specs, weights)}
+        params = tenants["A"][0]
+    elif args.qos:
+        raise SystemExit("--qos only applies under --multiplex")
     sched = BatchScheduler(model, params, n_slots=args.slots,
                            max_len=args.max_len, tenants=tenants)
     if model.executor is not None:
         ex = model.executor
         print(f"crossbar backend: {ex.n_resident} resident weight grids, "
-              f"{ex.n_devices} programmed devices, tenants={ex.tenants} "
-              f"({ex.n_devices_physical} physical incl. twin planes; "
+              f"{ex.n_devices} programmed devices/plane, "
+              f"{ex.stack_planes}-plane banks "
+              f"({ex.n_devices_physical} physical devices; "
               f"programmed={ex.stats['programmed']}, "
               f"cache_hits={ex.stats['cache_hits']})")
+        for t, entry in ex.residency().items():
+            print(f"  resident tenant {t}: v{entry['version']} "
+                  f"fingerprint={entry['fingerprint']}")
     key = jax.random.PRNGKey(1)
     for rid in range(args.requests):
         key, k = jax.random.split(key)
         prompt = jax.random.randint(k, (args.prompt_len,), 0,
                                     cfg.vocab - 1).astype(jnp.int32)
-        # multiplexed serving alternates the two tenants' token streams
-        model_id = "B" if (tenants and rid % 2) else "A"
+        # multiplexed serving round-robins the tenants' token streams
+        model_id = tenant_ids[rid % len(tenant_ids)]
         sched.submit(Request(rid=rid, prompt=prompt, max_new=args.max_new,
                              model_id=model_id))
 
     swap_after = (args.swap_after if args.swap_after is not None
                   else args.requests // 2)
-    swap_tenant = "B" if tenants else "A"
+    swap_tenant = tenant_ids[-1]
     swap_params = (resolve_swap_params(args.hot_swap, model, params)
                    if args.hot_swap else None)
 
@@ -167,10 +210,14 @@ def main(argv=None):
           f"{steps} decode steps, {dt:.2f}s "
           f"({total_tokens / max(dt, 1e-9):.1f} tok/s)")
     if tenants:
+        qos = sched.qos_report()
         for t in sched.tenants:
             reqs = [r for r in done if r.model_id == t]
+            q = qos[t]
             print(f"  tenant {t}: {len(reqs)} requests, "
-                  f"{sum(len(r.out) for r in reqs)} tokens "
+                  f"{sum(len(r.out) for r in reqs)} tokens; qos "
+                  f"weight={q['weight']:g} slots={q['slots']} "
+                  f"share={q['token_share'] * 100:.1f}% "
                   f"(fingerprint={model.executor.fingerprint(tenant=t)})")
     for r in done[:3]:
         print(f"  req {r.rid} [{r.model_id}]: {r.out[:8]}...")

@@ -97,44 +97,102 @@ class _Lane:
     tokens: jax.Array
     queue: List[Request]
     decode: Callable
+    # QoS: this lane's share of the slot budget and its admission weight
+    n_slots: int = 0
+    weight: float = 1.0
+    # served-token accounting (admission + decode tokens), the quantity
+    # QoS weights shift; see BatchScheduler.qos_report
+    tokens_served: int = 0
     # True while this tenant's own planes are mid-write (in-place swap):
     # its reads pause — admissions hold, in-flight slots freeze — and
     # resume on the promoted weights at the swap boundary
     paused: bool = False
 
 
+def _split_slots(n_slots: int, weights: Dict[str, float]) -> Dict[str, int]:
+    """QoS-weighted slot allocation across tenant lanes.
+
+    The slot budget is ``n_slots`` per tenant (so equal weights reproduce
+    the historical even split exactly); quotas are proportional to weight
+    with largest-remainder rounding, and a starvation guard pins every
+    tenant at >= 1 slot — a resident tenant with queued work always
+    decodes, however small its weight.
+    """
+    total = n_slots * len(weights)
+    wsum = float(sum(weights.values()))
+    raw = {t: total * float(w) / wsum for t, w in weights.items()}
+    alloc = {t: max(1, int(raw[t])) for t in weights}
+    leftover = total - sum(alloc.values())
+    # hand leftover slots to the largest fractional remainders (name
+    # breaks ties, so the split is deterministic)
+    order = sorted(weights, key=lambda t: (-(raw[t] - int(raw[t])), t))
+    i = 0
+    while leftover > 0:
+        alloc[order[i % len(order)]] += 1
+        leftover -= 1
+        i += 1
+    while leftover < 0:
+        # the >=1 guard oversubscribed the budget: reclaim from the
+        # largest allocation that can spare a slot
+        t = max(sorted(alloc), key=lambda k: alloc[k])
+        if alloc[t] <= 1:
+            break   # everyone is at the guard floor; keep the floor
+        alloc[t] -= 1
+        leftover += 1
+    return alloc
+
+
 class BatchScheduler:
     """Minimal continuous-batching scheduler (slot-based, multi-tenant).
 
-    Maintains a fixed decode batch of ``n_slots`` per tenant; free slots
-    are refilled from that tenant's queue by running a prefill for the
-    slot (production systems fuse prefill into the batch; here prefill is
-    per-admission, which keeps the decode step shape static — the
-    property the dry-run cells exercise).  Admission prefills are jitted
-    and cached per padded prompt-length bucket, so steady-state admission
-    is a cache hit, not a re-trace.
+    Maintains a fixed decode batch per tenant (the QoS-weighted slot
+    quota); free slots are refilled from that tenant's queue by batched
+    admission prefills, which keeps the decode step shape static — the
+    property the dry-run cells exercise.  Same-bucket queued prompts
+    coalesce into ONE batched prefill call per admission group; the
+    calls are jitted and cached per padded prompt-length bucket, so
+    steady-state admission is a cache hit, not a re-trace.
 
-    Passing ``tenants={"A": params_a, "B": params_b}`` multiplexes two
-    checkpoints from the two tile planes of ONE crossbar executor: each
-    tenant gets its own slot partition, cache, and jitted decode closure
-    (traced under ``executor.read_tenant(t)`` so the closure's trace
-    constants are that tenant's planes), and every ``step`` interleaves
-    both token streams.  Requests route by ``Request.model_id``.
+    Passing ``tenants={"A": params_a, "B": params_b, ...}`` multiplexes
+    up to ``stack_planes`` checkpoints from the plane bank of ONE
+    crossbar executor: each tenant gets its own slot partition, cache,
+    and jitted decode closure (traced under ``executor.read_tenant(t)``
+    so the closure's trace constants are that tenant's planes), and
+    every ``step`` interleaves all token streams.  Requests route by
+    ``Request.model_id``.
+
+    A tenant value may also be a ``(params, weight)`` pair: QoS weights
+    drive the slot split (``_split_slots``: proportional quota with a
+    >=1 starvation guard) and the admission order across lanes
+    (heavier lanes admit first each step).  Bare params mean weight 1.0,
+    which reproduces the historical even split exactly.
     """
 
     def __init__(self, model: Model, params, n_slots: int, max_len: int,
                  tenants: Optional[Dict[str, Any]] = None):
         self.model = model
         self.n_slots, self.max_len = n_slots, max_len
-        tenant_params = dict(tenants) if tenants else {"A": params}
+        tenant_params: Dict[str, Any] = {}
+        self._weights: Dict[str, float] = {}
+        for t, spec in (dict(tenants) if tenants else {"A": params}).items():
+            if (isinstance(spec, (tuple, list)) and len(spec) == 2
+                    and isinstance(spec[1], (int, float))):
+                p, w = spec
+            else:
+                p, w = spec, 1.0
+            if w <= 0:
+                raise ValueError(
+                    f"tenant {t!r} QoS weight must be > 0, got {w}")
+            tenant_params[t] = p
+            self._weights[t] = float(w)
         if "A" not in tenant_params:
             raise ValueError("tenant 'A' is required (it anchors the "
-                             "plane pairs)")
+                             "plane banks)")
         executor = getattr(model, "executor", None)
         if len(tenant_params) > 1 and executor is None:
             raise RuntimeError(
                 "multi-tenant multiplexing serves each checkpoint from "
-                "one tile plane of a stacked pair; it requires the "
+                "one plane of a stacked bank; it requires the "
                 "crossbar backend (ModelConfig(backend='crossbar'))")
         if executor is not None:
             # crossbar backend: program each tenant's weights onto its
@@ -144,6 +202,7 @@ class BatchScheduler:
             for t in sorted(tenant_params):
                 with executor.read_tenant(t):
                     executor.ensure_programmed(tenant_params[t])
+        self._slot_quota = _split_slots(n_slots, self._weights)
         self._lanes: Dict[str, _Lane] = {
             t: self._make_lane(t, p) for t, p in sorted(tenant_params.items())}
         # jitted admission prefill per tenant; jax's jit cache keys on the
@@ -156,11 +215,19 @@ class BatchScheduler:
     # -- lanes ---------------------------------------------------------------
 
     def _make_lane(self, tenant: str, params) -> _Lane:
+        n = self._slot_quota.get(tenant, self.n_slots)
         return _Lane(tenant=tenant, params=params,
-                     slots=[None] * self.n_slots,
-                     cache=self.model.init_cache(self.n_slots, self.max_len),
-                     tokens=jnp.zeros((self.n_slots, 1), jnp.int32),
-                     queue=[], decode=self._make_decode(tenant))
+                     slots=[None] * n,
+                     cache=self.model.init_cache(n, self.max_len),
+                     tokens=jnp.zeros((n, 1), jnp.int32),
+                     queue=[], decode=self._make_decode(tenant),
+                     n_slots=n, weight=self._weights.get(tenant, 1.0))
+
+    def _lane_order(self) -> List[str]:
+        """QoS admission/decode order: heavier lanes first, name breaks
+        ties (so the equal-weight order is the historical sorted one)."""
+        return sorted(self._lanes,
+                      key=lambda t: (-self._lanes[t].weight, t))
 
     def _make_decode(self, tenant: str) -> Callable:
         """Jitted decode closure ``(params, tokens, cache, leak) -> ...``.
@@ -217,10 +284,14 @@ class BatchScheduler:
         boundary and subsequent tokens come from the new weights — no
         request is dropped and no decode step reads mixed planes.
 
-        ``tenant="A"`` (default) writes the free shadow planes while A
-        keeps decoding.  ``tenant="B"`` targets the twin plane set: B's
-        lane pauses for the write window (its planes are the write
-        target) while tenant A's traffic flows uninterrupted — the same
+        ``tenant`` may name any tenant of the plane bank; the lifecycle
+        is chosen by bank state (see ``CrossbarExecutor.begin_swap``).
+        With a free plane the swap is *staged*: the tenant — resident or
+        a first-time live deploy — keeps serving through the whole
+        window and no lane pauses.  With a full bank a non-anchor
+        tenant is rewritten *in place*: its lane pauses for the write
+        window (its planes are the write target) while every other
+        tenant's traffic flows uninterrupted — the same
         read-under-write overlap, re-purposed for multi-tenancy.  A
         paused lane's in-flight requests freeze in place and resume on
         the promoted weights, exactly like single-tenant requests that
@@ -248,7 +319,7 @@ class BatchScheduler:
         constants of the jitted closures, so the tenant's decode closure
         rebuilds (one re-trace, zero dropped requests) and its cached
         admission prefills are dropped for the same reason.  A tenant
-        deployed live via ``begin_hot_swap(..., tenant="B")`` gets a
+        deployed live via ``begin_hot_swap(..., tenant=...)`` gets a
         fresh lane here and starts admitting."""
         # only the swapped tenant's cached prefills go stale: its planes
         # (trace constants) just changed.  Leakage is NOT baked into any
@@ -257,6 +328,17 @@ class BatchScheduler:
         self._prefill_fns.pop(tenant, None)
         lane = self._lanes.get(tenant)
         if lane is None:
+            if tenant not in self._weights:
+                # a live-deployed tenant joins the QoS split at weight
+                # 1.0: its quota comes from the same proportional rule
+                # the construction-time split used (existing lanes keep
+                # their quotas — resizing them would drop in-flight
+                # cache state), so a weight-1.0 newcomer decodes like
+                # any other weight-1.0 lane, not at the full base width
+                self._weights[tenant] = 1.0
+                total = self.n_slots * len(self._weights)
+                wsum = sum(self._weights.values())
+                self._slot_quota[tenant] = max(1, round(total / wsum))
             self._lanes[tenant] = self._make_lane(tenant, new_params)
         else:
             lane.params = new_params
@@ -306,25 +388,32 @@ class BatchScheduler:
     # -- admission (jitted, bucketed prefill) --------------------------------
 
     def _build_prefill(self, tenant: str) -> Callable:
-        """Jitted per-slot admission prefill.
+        """Jitted coalesced admission prefill (batched, one call per
+        same-bucket admission group).
 
-        The prompt's first ``m = len-1`` tokens prefill at a padded
-        bucket length (jax's jit cache keys on that shape, so admissions
-        re-trace per bucket, not per prompt length); the cache fill
-        marker is then pinned to ``m`` — pad positions beyond it are
-        length-masked, never attended — and one decode step on the last
-        real token yields the admission token, bit-exact with an unpadded
-        prefill of the full prompt.
+        Every admission batch is the lane's full slot width (unused rows
+        are zero-padded and discarded), so jax's jit cache keys only on
+        the padded bucket length — one trace per bucket, whatever the
+        group size.  Each row's first ``m_i = len_i - 1`` prompt tokens
+        prefill at the bucket length; the cache fill marker is then
+        pinned *per row* to ``m_i`` — pad positions beyond it are
+        length-masked, never attended — and one decode step on the
+        per-row last real tokens yields every admission token in one
+        call.  Bit-exact with per-slot batch-of-1 admissions (and with
+        an unpadded prefill of each full prompt): every op on the path
+        is row-independent — per-row input-quantization scales, per-row
+        cache positions and causal offsets.
         """
         model, max_len = self.model, self.max_len
         ex = model.executor
 
         def pf(params, tokens_pad, last_tok, m):
             self._prefill_traces += 1       # trace-time only (host state)
-            cache = model.init_cache(1, max_len)
+            cache = model.init_cache(tokens_pad.shape[0], max_len)
             _, cache = model.prefill(params, {"tokens": tokens_pad}, cache)
             layers = dict(cache["layers"])
-            layers["len"] = jnp.full_like(layers["len"], m)
+            layers["len"] = jnp.broadcast_to(
+                m[None, :], layers["len"].shape).astype(layers["len"].dtype)
             logits, cache = model.decode_step(params, last_tok,
                                               dict(cache, layers=layers))
             tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
@@ -352,32 +441,61 @@ class BatchScheduler:
         return (ex.current_leak_codes() if ex is not None
                 else jnp.float32(0.0))
 
-    def _prefill(self, lane: _Lane, prompt: jax.Array):
+    def _next_bucket_group(self, lane: _Lane,
+                           n_free: int) -> List[Request]:
+        """Pop the longest FIFO prefix of the lane's queue whose members
+        share one padded prefill bucket, capped at the free slot count —
+        the unit one coalesced admission call serves."""
+        head = lane.queue[0]
+        m0 = int(head.prompt.shape[0]) - 1
+        if m0 >= self.max_len:
+            # the last real token's K/V lands at position m: the prompt
+            # must fit strictly inside the cache depth or the write (and
+            # every token after it) silently falls off the end
+            raise ValueError(f"prompt length {m0 + 1} exceeds the "
+                             f"scheduler's max_len {self.max_len}")
+        bucket = _prompt_bucket(m0, self.max_len)
+        group = [lane.queue.pop(0)]
+        while lane.queue and len(group) < n_free:
+            m = int(lane.queue[0].prompt.shape[0]) - 1
+            if (m >= self.max_len
+                    or _prompt_bucket(m, self.max_len) != bucket):
+                break
+            group.append(lane.queue.pop(0))
+        return group
+
+    def _prefill_group(self, lane: _Lane, group: List[Request]):
+        """One batched prefill call for a same-bucket admission group
+        (batch = the lane's slot width; rows past the group are dummies)."""
         fn = self._prefill_fns.get(lane.tenant)
         if fn is None:
             fn = self._prefill_fns[lane.tenant] = self._build_prefill(
                 lane.tenant)
-        m = int(prompt.shape[0]) - 1
-        if m >= self.max_len:
-            # the last real token's K/V lands at position m: the prompt
-            # must fit strictly inside the cache depth or the write (and
-            # every token after it) silently falls off the end
-            raise ValueError(f"prompt length {m + 1} exceeds the "
-                             f"scheduler's max_len {self.max_len}")
-        bucket = _prompt_bucket(m, self.max_len)
-        pad = jnp.zeros((1, bucket), jnp.int32)
-        if m:
-            pad = pad.at[0, :m].set(prompt[:m])
-        return fn(lane.params, pad, prompt[None, -1:].astype(jnp.int32),
-                  jnp.int32(m), self._leak_now())
+        bucket = _prompt_bucket(int(group[0].prompt.shape[0]) - 1,
+                                self.max_len)
+        b = lane.n_slots
+        tokens_pad = jnp.zeros((b, bucket), jnp.int32)
+        last = jnp.zeros((b, 1), jnp.int32)
+        ms = [0] * b
+        for j, req in enumerate(group):
+            m = int(req.prompt.shape[0]) - 1
+            if m:
+                tokens_pad = tokens_pad.at[j, :m].set(req.prompt[:m])
+            last = last.at[j, 0].set(req.prompt[-1])
+            ms[j] = m
+        return fn(lane.params, tokens_pad, last,
+                  jnp.asarray(ms, jnp.int32), self._leak_now())
 
     def _admit(self, lane: _Lane, finished: List[Request]) -> None:
-        for slot in range(self.n_slots):
-            while lane.slots[slot] is None and lane.queue:
-                req = lane.queue.pop(0)
-                # per-slot prefill (batch of 1), then splice into the cache
-                tok, c1 = self._prefill(lane, req.prompt)
-                req.out.append(int(tok[0]))
+        while lane.queue:
+            free = [i for i, s in enumerate(lane.slots) if s is None]
+            if not free:
+                return
+            group = self._next_bucket_group(lane, len(free))
+            toks, cache_b = self._prefill_group(lane, group)
+            for j, req in enumerate(group):
+                req.out.append(int(toks[j]))
+                lane.tokens_served += 1
                 if len(req.out) >= req.max_new:
                     # the admission token already met the budget: finish
                     # here and keep the slot free for the next request —
@@ -385,14 +503,19 @@ class BatchScheduler:
                     req.done = True
                     finished.append(req)
                     continue
+                slot = free.pop(0)
                 # transformer-family caches are (L, B, ...): batch axis 1.
-                # (The scheduler targets decoder LMs; stateful families use
-                # greedy_generate / custom loops.)
+                # (The scheduler targets decoder LMs; stateful families
+                # use greedy_generate / custom loops.)
                 lane.cache = jax.tree.map(
-                    lambda full, one: jax.lax.dynamic_update_slice_in_dim(
-                        full, one.astype(full.dtype), slot, axis=1),
-                    lane.cache, c1)
-                lane.tokens = lane.tokens.at[slot, 0].set(tok[0])
+                    lambda full, newc, j=j, slot=slot:
+                    jax.lax.dynamic_update_slice_in_dim(
+                        full,
+                        jax.lax.dynamic_slice_in_dim(
+                            newc, j, 1, axis=1).astype(full.dtype),
+                        slot, axis=1),
+                    lane.cache, cache_b)
+                lane.tokens = lane.tokens.at[slot, 0].set(toks[j])
                 lane.slots[slot] = req
 
     def step(self) -> List[Request]:
@@ -408,7 +531,7 @@ class BatchScheduler:
         finished: List[Request] = []
         decoded = False
         leak = self._leak_now()
-        for t in sorted(self._lanes):
+        for t in self._lane_order():
             lane = self._lanes[t]
             if lane.paused:
                 continue
@@ -422,6 +545,7 @@ class BatchScheduler:
                 if req is None:
                     continue
                 req.out.append(int(lane.tokens[i, 0]))
+                lane.tokens_served += 1
                 if len(req.out) >= req.max_new:
                     req.done = True
                     finished.append(req)
@@ -429,3 +553,16 @@ class BatchScheduler:
         if decoded and self._swap is not None:
             self._swap.note_decode_step()
         return finished
+
+    def qos_report(self) -> Dict[str, Dict[str, Any]]:
+        """Per-tenant QoS accounting in ``swap_history`` style: the
+        configured weight, the slot quota the weighted split granted,
+        and the served-token count/share so far (admission + decode
+        tokens) — the figure the weights are supposed to shift."""
+        total = sum(lane.tokens_served for lane in self._lanes.values())
+        return {t: {"weight": lane.weight,
+                    "slots": lane.n_slots,
+                    "tokens_served": lane.tokens_served,
+                    "token_share": (lane.tokens_served / total
+                                    if total else 0.0)}
+                for t, lane in sorted(self._lanes.items())}

@@ -105,10 +105,12 @@ class HotSwapper:
     Call :meth:`step` between decode steps (the BatchScheduler does this
     automatically); once :attr:`done`, :meth:`promote` lands every plane
     atomically and returns the new params tree for the caller to serve
-    embeddings/norms from.  ``tenant="B"`` targets the twin plane set
-    instead — reprogramming (or live-deploying) tenant B's checkpoint
-    under tenant A's read traffic, the multi-tenant use of the same
-    read-under-write window.
+    embeddings/norms from.  ``tenant`` may name any tenant of the plane
+    bank: with a free plane the swap is *staged* (the tenant — resident
+    or a first-time live deploy — keeps serving through the window);
+    with a full bank a non-anchor tenant is rewritten *in place* (its
+    reads pause) under the other tenants' read traffic — the
+    multi-tenant use of the same read-under-write window.
     """
 
     def __init__(self, executor, new_params: Any, chunks_per_step: int = 8,
@@ -175,4 +177,9 @@ class HotSwapper:
             wall_swap_s=self.wall_swap_s)
         rep["policy"] = "overlapped"
         rep["tenant"] = self.tenant
+        # bank-level context: which lifecycle this window used and how
+        # tall the stack is (staged = the tenant served throughout;
+        # in_place = its reads paused while the others flowed)
+        rep["swap_mode"] = "in_place" if self.plan.in_place else "staged"
+        rep["stack_planes"] = self.executor.stack_planes
         return rep

@@ -1,0 +1,496 @@
+"""N-plane banks: role-tagged slot lifecycle, the unified residency
+registry, N-tenant serving bit-exactness, staged-vs-in-place swap modes,
+the eviction-during-swap race regression, QoS-weighted slot allocation,
+and coalesced same-bucket admission prefill."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import crossbar, engine as eng, modes
+from repro.core.crossbar import PlaneConfig
+from repro.core.device import DeviceConfig
+from repro.core.engine import EngineConfig
+from repro.core.executor import CrossbarExecutor
+from repro.core.modes import BankState, StackState
+from repro.core.planes import PlaneBank
+from repro.core.quant import QuantConfig
+from repro.models.model import ModelConfig, build_model
+from repro.serve.engine import BatchScheduler, Request, _split_slots
+from repro.serve.hotswap import finetune_delta
+
+CFG3 = EngineConfig(tile_rows=32, tile_cols=32, mode="deepnet",
+                    quant=QuantConfig(w_bits=4, in_bits=8, adc_bits=10),
+                    device=DeviceConfig(stack_planes=3))
+CFG2 = dataclasses.replace(CFG3, device=DeviceConfig(stack_planes=2))
+
+TINY3 = ModelConfig(
+    name="tiny", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv=2, head_dim=16, d_ff=64, vocab=128, backend="crossbar",
+    dtype=jnp.float32,
+    xbar=EngineConfig(tile_rows=32, tile_cols=32, mode="deepnet",
+                      quant=QuantConfig(w_bits=4, in_bits=6, adc_bits=12),
+                      device=DeviceConfig(stack_planes=3)))
+
+
+def _w(key, k, n):
+    return jax.random.normal(jax.random.PRNGKey(key), (k, n)) * 0.3
+
+
+def _cold(w, cfg=CFG3):
+    ex = CrossbarExecutor(cfg)
+    ex.program_params({"head": w})
+    return ex
+
+
+# -- DeviceConfig / geometry ---------------------------------------------------
+
+def test_device_config_validates_and_names_tenants():
+    assert DeviceConfig().stack_planes == 2
+    assert DeviceConfig(stack_planes=3).tenant_names == ("A", "B", "C")
+    assert DeviceConfig(stack_planes=2).tenant_names == ("A", "B")
+    with pytest.raises(ValueError, match="stack_planes"):
+        DeviceConfig(stack_planes=1)
+    assert EngineConfig().stack_planes == 2
+    assert CFG3.stack_planes == 3
+
+
+def test_physical_device_count_scales_with_stack_height():
+    w = _w(0, 64, 32)
+    ex2, ex3 = _cold(w, CFG2), _cold(w, CFG3)
+    assert ex2.n_devices == ex3.n_devices            # serving count: 1 plane
+    assert ex2.n_devices_physical == 2 * ex2.n_devices
+    assert ex3.n_devices_physical == 3 * ex3.n_devices
+
+
+# -- PlaneBank slot lifecycle --------------------------------------------------
+
+def _pw(key=0, k=64, n=32):
+    return eng.program(_w(key, k, n), CFG3)
+
+
+def test_bank_roles_free_staging_resident():
+    bank = PlaneBank("tile", n_planes=3)
+    assert bank.n_free == 3 and bank.residents == []
+    bank.assign("A", _pw(1), "fp_a")
+    bank.assign("B", _pw(2), "fp_b")
+    assert bank.n_free == 1 and sorted(bank.residents) == ["A", "B"]
+    assert bank.fingerprint_for("A") == "fp_a"
+    slot = bank.reserve_staging()
+    assert slot.role == "staging" and bank.n_free == 0
+    # no second staging slot, and no free slot left for a new resident
+    with pytest.raises(RuntimeError, match="already"):
+        bank.reserve_staging()
+    with pytest.raises(RuntimeError, match="full"):
+        bank.assign("C", _pw(3), "fp_c")
+    # land the staged plane on tenant A: read retargets, old slot frees
+    bank.land_staged("A", _pw(4), "fp_a2")
+    assert bank.fingerprint_for("A") == "fp_a2"
+    assert bank.n_free == 1 and bank.staging is None
+    # release path (abort): staging reverts to free
+    bank.reserve_staging()
+    bank.release_staging()
+    assert bank.n_free == 1
+    bank.evict("B")
+    assert bank.n_free == 2
+    with pytest.raises(RuntimeError, match="not resident"):
+        bank.fingerprint_for("B")
+
+
+# -- executor: N-tenant residency registry ------------------------------------
+
+def test_three_tenants_read_their_own_planes_bit_exact():
+    ws = {t: _w(i + 10, 64, 48) for i, t in enumerate("ABC")}
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 64))
+    ex = CrossbarExecutor(CFG3)
+    for t in "ABC":
+        ex.program_params({"head": ws[t]}, tenant=t)
+    assert ex.tenants == ["A", "B", "C"]
+    for t in "ABC":
+        cold = _cold(ws[t])
+        assert jnp.array_equal(ex.linear(x, ws[t], "head", tenant=t),
+                               cold.linear(x, ws[t], "head"))
+    # one 3-plane stack vs three dedicated 3-plane stacks: 1/3 the devices
+    assert 3 * ex.n_devices_physical == sum(
+        _cold(ws[t]).n_devices_physical for t in "ABC")
+    # a 4th tenant exceeds the plane population
+    with pytest.raises(ValueError, match="unknown tenant"):
+        ex.program_params({"head": ws["A"]}, tenant="D")
+
+
+def test_residency_registry_reports_fingerprint_and_version():
+    w_a, w_b = _w(20, 64, 32), _w(21, 64, 32)
+    ex = CrossbarExecutor(CFG3)
+    ex.program_params({"head": w_a})
+    ex.program_params({"head": w_b}, tenant="B")
+    reg = ex.residency()
+    assert sorted(reg) == ["A", "B"]
+    assert reg["A"] == {"fingerprint": ex.fingerprint(tenant="A"),
+                        "version": 1}
+    assert reg["B"]["fingerprint"] == _cold(w_b).fingerprint()
+    ex.swap({"head": w_b + 0.1}, tenant="B")
+    assert ex.residency()["B"]["version"] == 2
+    assert ex.residency()["A"]["version"] == 1
+
+
+def test_staged_swap_with_free_plane_never_pauses_the_tenant():
+    """With a free plane in the bank, even a non-anchor tenant's swap is
+    staged: its reads serve the OLD plane through the whole window and
+    retarget at promote — no mid-write pause (the N=2 in-place pause was
+    a full-bank fallback, not a law)."""
+    w_a, w_b, w_b2 = _w(30, 96, 48), _w(31, 96, 48), _w(32, 96, 48)
+    x = jax.random.normal(jax.random.PRNGKey(33), (3, 96))
+    ex = CrossbarExecutor(CFG3)               # 3 planes: A, B, one free
+    ex.program_params({"head": w_a})
+    ex.program_params({"head": w_b}, tenant="B")
+    y_b = ex.linear(x, w_b, "head", tenant="B")
+    plan = ex.begin_swap({"head": w_b2}, tenant="B")
+    assert not plan.in_place                  # free plane -> staged
+    ex.write_chunks(1)
+    # mid-window: B still serves its old plane, bit-exact — no pause
+    assert jnp.array_equal(ex.linear(x, w_b, "head", tenant="B"), y_b)
+    while not plan.done:
+        ex.write_chunks(8)
+    assert jnp.array_equal(ex.linear(x, w_b, "head", tenant="B"), y_b)
+    ex.promote()
+    assert jnp.array_equal(ex.linear(x, w_b2, "head", tenant="B"),
+                           _cold(w_b2).linear(x, w_b2, "head"))
+    assert ex.fingerprint(tenant="A") == _cold(w_a).fingerprint()
+
+
+def test_full_bank_swap_falls_back_to_in_place_and_pauses_tenant():
+    ws = {t: _w(i + 40, 64, 32) for i, t in enumerate("ABC")}
+    x = jax.random.normal(jax.random.PRNGKey(43), (2, 64))
+    ex = CrossbarExecutor(CFG3)
+    for t in "ABC":
+        ex.program_params({"head": ws[t]}, tenant=t)
+    plan = ex.begin_swap({"head": ws["C"] + 0.1}, tenant="C")
+    assert plan.in_place                      # bank full -> in-place
+    ex.write_chunks(1)
+    with pytest.raises(RuntimeError, match="mid-write"):
+        ex.linear(x, ws["C"], "head", tenant="C")
+    # A and B flow through the window untouched
+    for t in "AB":
+        assert jnp.array_equal(ex.linear(x, ws[t], "head", tenant=t),
+                               _cold(ws[t]).linear(x, ws[t], "head"))
+    ex.abort_swap()
+    # the anchor tenant never pauses: with a full bank its swap is refused
+    with pytest.raises(RuntimeError, match="no free write plane"):
+        ex.begin_swap({"head": ws["A"] + 0.1}, tenant="A")
+
+
+def test_eviction_during_swap_raises_instead_of_discarding_shadow():
+    """Regression for the PlanePair.clear_twin race: evicting a resident
+    while a SwapPlan is in flight over the same weights must raise (the
+    old API silently discarded the in-flight staged shadow); abort_swap
+    first, then eviction proceeds."""
+    w_a, w_b = _w(50, 64, 32), _w(51, 64, 32)
+    ex = CrossbarExecutor(CFG3)
+    ex.program_params({"head": w_a})
+    ex.program_params({"head": w_b}, tenant="B")
+    plan = ex.begin_swap({"head": w_a + 0.1}, tenant="A")   # staged
+    ex.write_chunks(1)
+    with pytest.raises(RuntimeError, match="abort_swap"):
+        ex.evict_tenant("B")
+    assert ex.swap_in_flight and not plan.done
+    ex.abort_swap()
+    ex.evict_tenant("B")
+    assert ex.tenants == ["A"]
+    # the aborted staging slots were released: a fresh swap still works
+    ex.swap({"head": w_a + 0.1})
+    assert ex.version("A") == 2
+
+
+def test_new_tenant_can_deploy_during_swap_when_a_plane_is_free():
+    """At N >= 3 a staged swap reserves ONE plane; a first-time tenant
+    may still claim another free plane mid-window (the N=2 refusal was
+    capacity, not policy)."""
+    w_a, w_b = _w(60, 64, 32), _w(61, 64, 32)
+    ex = CrossbarExecutor(CFG3)
+    ex.program_params({"head": w_a})
+    plan = ex.begin_swap({"head": w_a + 0.1})  # staged: 1 resident+1 staging
+    ex.program_params({"head": w_b}, tenant="B")   # 3rd plane is free
+    assert ex.tenants == ["A", "B"]
+    # now the stack is saturated: a third new tenant must be refused
+    with pytest.raises(RuntimeError, match="while a hot-swap is in"):
+        ex.program_params({"head": _w(62, 64, 32)}, tenant="C")
+    while not plan.done:
+        ex.write_chunks(8)
+    ex.promote()
+    assert ex.version("A") == 2
+    ex.program_params({"head": _w(62, 64, 32)}, tenant="C")
+    assert ex.tenants == ["A", "B", "C"]
+
+
+# -- modes: N-high BankState ---------------------------------------------------
+
+def _stack_cfg():
+    return modes.StackConfig(rows_per_plane=8, n_cols=6)
+
+
+def test_bank_state_n2_matches_stack_state_ops():
+    cfg = _stack_cfg()
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(0), 4)
+    g_top = jax.random.uniform(k1, (8, 6), minval=1e-5, maxval=1e-4)
+    g_bot = jax.random.uniform(k2, (8, 6), minval=1e-5, maxval=1e-4)
+    g_new = jax.random.uniform(k3, (8, 6), minval=1e-5, maxval=1e-4)
+    v = jax.random.uniform(k4, (8,), maxval=1.0)
+    pair = StackState(g_top, g_bot, jnp.bool_(True))
+    bank = modes.bank_from_pair(pair)
+    # read parity (leakage included)
+    assert jnp.array_equal(modes.bank_read(bank, v, cfg),
+                           modes.deepnet_read(pair, v, cfg))
+    # one full pipeline beat: write-inactive + swap == write-ring + advance
+    i_pair, pair2 = modes.deepnet_layer(pair, v, g_new, cfg)
+    i_bank, bank2 = modes.bank_layer(bank, v, g_new, cfg)
+    assert jnp.array_equal(i_pair, i_bank)
+    assert jnp.array_equal(bank2.g[0], pair2.g_top)
+    assert jnp.array_equal(bank2.g[1], pair2.g_bot)
+    assert int(bank2.read_idx) == (0 if bool(pair2.read_top) else 1)
+
+
+def test_bank_state_n3_ring_rotates_and_isolates_planes():
+    cfg = _stack_cfg()
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    g = jnp.stack([jax.random.uniform(k, (8, 6), minval=1e-5, maxval=1e-4)
+                   for k in ks[:3]])
+    v = jax.random.uniform(ks[3], (8,), maxval=1.0)
+    bank = BankState(g, jnp.int32(0))
+    # reads address exactly the active plane
+    for idx in range(3):
+        b = modes.bank_set_read(bank, idx)
+        one = StackState(g[idx], g[idx], jnp.bool_(True))
+        assert jnp.array_equal(
+            modes.bank_read(b, v, cfg, include_leakage=False),
+            modes.deepnet_read(one, v, cfg, include_leakage=False))
+    # writing the ring's next plane never perturbs the other two
+    g_new = jax.random.uniform(ks[4], (8, 6), minval=1e-5, maxval=1e-4)
+    b2 = modes.bank_write_plane(bank, modes.bank_write_idx(bank), g_new)
+    assert jnp.array_equal(b2.g[1], g_new)
+    assert jnp.array_equal(b2.g[0], g[0])
+    assert jnp.array_equal(b2.g[2], g[2])
+    # the ring advances mod N
+    b3 = modes.bank_advance(modes.bank_advance(modes.bank_advance(bank)))
+    assert int(b3.read_idx) == 0
+    # two concurrently writing planes leak twice the single-plane term
+    lk1 = modes.bank_read(bank, v, cfg, n_writing=1)
+    lk2 = modes.bank_read(bank, v, cfg, n_writing=2)
+    lk0 = modes.bank_read(bank, v, cfg, include_leakage=False)
+    assert jnp.allclose(lk2 - lk0, 2.0 * (lk1 - lk0), rtol=1e-6)
+
+
+# -- QoS slot allocation -------------------------------------------------------
+
+def test_split_slots_even_weights_keep_historical_split():
+    assert _split_slots(2, {"A": 1.0}) == {"A": 2}
+    assert _split_slots(2, {"A": 1.0, "B": 1.0}) == {"A": 2, "B": 2}
+    assert _split_slots(3, {"A": 1.0, "B": 1.0, "C": 1.0}) == {
+        "A": 3, "B": 3, "C": 3}
+
+
+def test_split_slots_weighted_with_starvation_guard():
+    # 2:1:1 at 4 base slots -> exact 6/3/3 of the 12-slot budget
+    assert _split_slots(4, {"A": 2.0, "B": 1.0, "C": 1.0}) == {
+        "A": 6, "B": 3, "C": 3}
+    # extreme skew: the tiny-weight tenant still gets >= 1 slot
+    alloc = _split_slots(2, {"A": 100.0, "B": 0.001})
+    assert alloc["B"] >= 1 and sum(alloc.values()) == 4
+    # budget conserved under awkward ratios
+    alloc = _split_slots(2, {"A": 2.0, "B": 1.0, "C": 1.0})
+    assert sum(alloc.values()) == 6 and alloc["A"] == 3
+    assert min(alloc.values()) >= 1
+
+
+# -- scheduler: N-tenant serving ----------------------------------------------
+
+def _params_trio():
+    model = build_model(TINY3)
+    pa = model.init(jax.random.PRNGKey(0))
+    pb = finetune_delta(pa, scale=0.05, seed=7)
+    pc = finetune_delta(pa, scale=0.08, seed=13)
+    return model, {"A": pa, "B": pb, "C": pc}
+
+
+def _submit(sched, model_id, n_req, max_new=4, seed0=0):
+    for i in range(n_req):
+        p = jax.random.randint(jax.random.PRNGKey(seed0 + i), (5,), 0,
+                               TINY3.vocab - 1).astype(jnp.int32)
+        sched.submit(Request(rid=seed0 + i, prompt=p, max_new=max_new,
+                             model_id=model_id))
+
+
+def _drain(sched, n_req, max_steps=300):
+    done, steps = [], 0
+    while len(done) < n_req and steps < max_steps:
+        done += sched.step()
+        steps += 1
+    return done
+
+
+def test_three_tenant_bank_matches_three_dedicated_schedulers():
+    """The acceptance property: all three tenants' token streams from
+    ONE 3-plane-bank scheduler are bit-identical to three dedicated
+    single-tenant schedulers — at a third of the physical devices."""
+    model_m, trio = _params_trio()
+    sched = BatchScheduler(model_m, trio["A"], n_slots=2, max_len=24,
+                           tenants=dict(trio))
+    assert sched.tenants == ["A", "B", "C"]
+    for i, t in enumerate("ABC"):
+        _submit(sched, t, 2, seed0=100 * i)
+    done = _drain(sched, 6)
+    assert len(done) == 6
+    mux = {r.rid: r.out for r in done}
+
+    for i, t in enumerate("ABC"):
+        model_d = build_model(TINY3)
+        ded = BatchScheduler(model_d, trio[t], n_slots=2, max_len=24)
+        _submit(ded, "A", 2, seed0=100 * i)
+        for r in _drain(ded, 2):
+            assert r.out == mux[r.rid], (t, r.rid)
+        assert (model_d.executor.n_devices_physical
+                == model_m.executor.n_devices_physical)
+
+
+def test_tenant_c_swap_under_a_b_traffic_drops_nothing():
+    """begin_swap on tenant C with A+B traffic in flight: zero A/B
+    requests drop, their streams are bit-identical to a swap-free run,
+    and C's identity is never a partially written plane (exactly old-C
+    before the boundary, exactly new-C after)."""
+    model, trio = _params_trio()
+    pc2 = finetune_delta(trio["A"], scale=0.11, seed=31)
+
+    model_r, trio_r = _params_trio()
+    ref = BatchScheduler(model_r, trio_r["A"], n_slots=2, max_len=24,
+                         tenants=dict(trio_r))
+    _submit(ref, "A", 2, max_new=8, seed0=0)
+    _submit(ref, "B", 2, max_new=8, seed0=100)
+    ref_out = {r.rid: r.out for r in _drain(ref, 4)}
+
+    sched = BatchScheduler(model, trio["A"], n_slots=2, max_len=24,
+                           tenants=dict(trio))
+    _submit(sched, "A", 2, max_new=8, seed0=0)
+    _submit(sched, "B", 2, max_new=8, seed0=100)
+    _submit(sched, "C", 1, max_new=3, seed0=200)
+    done = []
+    for _ in range(2):
+        done += sched.step()
+    ex = model.executor
+    fp_c_old = ex.fingerprint(tenant="C")
+    cold_c2 = CrossbarExecutor(TINY3.xbar)
+    cold_c2.program_params(pc2)
+    fp_c_new = cold_c2.fingerprint()
+
+    sched.begin_hot_swap(pc2, chunks_per_step=6, tenant="C")
+    assert sched._lanes["C"].paused           # full bank -> in-place
+    fps_c, steps = [], 0
+    while (sched.swap_in_flight or len(done) < 5) and steps < 300:
+        done += sched.step()
+        fps_c.append(ex.fingerprint(tenant="C"))
+        steps += 1
+    assert len(done) == 5                     # zero dropped, any tenant
+    for r in done:
+        if r.model_id in ("A", "B"):
+            assert r.out == ref_out[r.rid]    # A/B streams unperturbed
+            assert len(r.out) == 8
+    # never a partially written plane: old-C then new-C, nothing else
+    assert set(fps_c) <= {fp_c_old, fp_c_new}
+    flip = fps_c.index(fp_c_new)
+    assert fps_c == [fp_c_old] * flip + [fp_c_new] * (len(fps_c) - flip)
+    assert not sched._lanes["C"].paused
+    (rep,) = sched.swap_history
+    assert rep["tenant"] == "C" and rep["swap_mode"] == "in_place"
+    assert rep["stack_planes"] == 3
+    assert rep["decode_steps_during_swap"] > 0
+
+
+def test_qos_weights_shift_served_token_shares():
+    """2:1:1 weights at 4 base slots -> 6/3/3 slot quotas; with all
+    lanes saturated the served-token shares land on 50/25/25 within
+    +-10 % (the acceptance figure)."""
+    model, trio = _params_trio()
+    sched = BatchScheduler(
+        model, trio["A"], n_slots=4, max_len=24,
+        tenants={"A": (trio["A"], 2.0), "B": (trio["B"], 1.0),
+                 "C": (trio["C"], 1.0)})
+    q = sched.qos_report()
+    assert {t: q[t]["slots"] for t in q} == {"A": 6, "B": 3, "C": 3}
+    for i, t in enumerate("ABC"):
+        _submit(sched, t, 30, max_new=4, seed0=100 * i)
+    for _ in range(10):                       # lanes stay saturated
+        sched.step()
+    q = sched.qos_report()
+    total = sum(q[t]["tokens_served"] for t in q)
+    assert total > 0
+    for t, want in (("A", 0.5), ("B", 0.25), ("C", 0.25)):
+        assert abs(q[t]["token_share"] - want) <= 0.10 * 1.0, (t, q)
+    # heavier lane really served ~2x either light lane
+    assert q["A"]["tokens_served"] > 1.5 * q["B"]["tokens_served"]
+
+
+def test_live_deployed_tenant_joins_qos_split_at_weight_one():
+    """A tenant live-deployed after construction must enter the QoS
+    split like any weight-1.0 lane (same proportional quota rule), not
+    at the full base slot width."""
+    model, trio = _params_trio()
+    sched = BatchScheduler(model, trio["A"], n_slots=6, max_len=24,
+                           tenants={"A": (trio["A"], 2.0),
+                                    "B": (trio["B"], 1.0)})
+    q = sched.qos_report()
+    assert q["A"]["slots"] == 8 and q["B"]["slots"] == 4
+    hs = sched.begin_hot_swap(trio["C"], chunks_per_step=50, tenant="C")
+    assert not hs.plan.in_place          # free plane: staged live deploy
+    steps = 0
+    while sched.swap_in_flight and steps < 50:
+        sched.step()
+        steps += 1
+    q = sched.qos_report()
+    assert sorted(q) == ["A", "B", "C"]
+    assert q["C"]["weight"] == 1.0
+    assert q["C"]["slots"] == q["B"]["slots"]   # equal weight, equal quota
+
+
+def test_qos_weight_validation():
+    model, trio = _params_trio()
+    with pytest.raises(ValueError, match="weight"):
+        BatchScheduler(model, trio["A"], n_slots=2, max_len=24,
+                       tenants={"A": (trio["A"], 0.0)})
+
+
+# -- coalesced admission prefill ----------------------------------------------
+
+def test_coalesced_admission_is_bit_exact_with_serial_admission():
+    """Several same-bucket prompts admitted as ONE batched prefill call
+    must produce streams bit-identical to one-at-a-time admissions
+    (n_slots=1 forces serial batch-of-1 groups)."""
+    model_c, trio = _params_trio()
+    sched_c = BatchScheduler(model_c, trio["A"], n_slots=3, max_len=24)
+    _submit(sched_c, "A", 3, max_new=5, seed0=0)
+    before = sched_c._prefill_traces
+    done_c = {r.rid: r.out for r in _drain(sched_c, 3)}
+    # all three prompts share one bucket: ONE batched call, ONE trace
+    assert sched_c._prefill_traces == before + 1
+
+    model_s, trio_s = _params_trio()
+    sched_s = BatchScheduler(model_s, trio_s["A"], n_slots=1, max_len=24)
+    _submit(sched_s, "A", 3, max_new=5, seed0=0)
+    done_s = {r.rid: r.out for r in _drain(sched_s, 3)}
+    assert done_c == done_s
+
+
+def test_coalesced_admission_mixed_buckets_split_into_groups():
+    """A FIFO run mixing two buckets admits as one group per bucket and
+    stays bit-exact with the unbatched greedy reference."""
+    from repro.serve.engine import greedy_generate
+    model, trio = _params_trio()
+    sched = BatchScheduler(model, trio["A"], n_slots=4, max_len=32)
+    refs = {}
+    for rid, plen in enumerate((5, 7, 12, 4)):   # buckets 8, 8, 16, 8
+        p = jax.random.randint(jax.random.PRNGKey(70 + rid), (plen,), 0,
+                               TINY3.vocab - 1).astype(jnp.int32)
+        refs[rid] = [int(t) for t in greedy_generate(
+            model, trio["A"], {"tokens": p[None]}, max_new=4,
+            max_len=32)[0]]
+        sched.submit(Request(rid=rid, prompt=p, max_new=4))
+    done = {r.rid: r.out for r in _drain(sched, 4)}
+    assert done == refs
