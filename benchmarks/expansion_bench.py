@@ -1,0 +1,203 @@
+"""Expansion-mode serving bench: per-weight mode policy acceptance.
+
+Two acceptance gates (CI "Expansion smoke", exit-code enforced):
+
+  * **policy** — ``mode_report()`` on the paper's 10x10x2 prototype
+    geometry: the ``"auto"`` policy must program the accuracy-critical
+    layers (attention projections + LM head) as expansion-fused pairs
+    and keep the swap-heavy MLP mats in deep-net layout, with a mean
+    worst-case IR-drop reduction >= 20% on the expansion layers vs the
+    all-deep-net layout of the same doubled-input reads (paper: 22%;
+    exact nodal solves, ``ir_drop.mode_ir_report``).
+  * **streams** — mixed-mode serving is bit-exact across execution
+    paths: the same auto-policy scheduler decodes identical token
+    streams through the Pallas kernel lane (``use_kernel=True``) and
+    the digital-twin reference scan, with the kernel path actually
+    lowered for the decode closures (``engine.path_calls``).
+
+CLI: ``python benchmarks/expansion_bench.py --json BENCH_expansion.json``
+(exits nonzero if an acceptance figure fails; the artifact passes the
+``benchmarks/meta.py`` schema gate).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core import engine as eng  # noqa: E402
+from repro.core.engine import EngineConfig  # noqa: E402
+from repro.core.executor import CrossbarExecutor  # noqa: E402
+from repro.core.quant import QuantConfig  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.serve.engine import BatchScheduler, Request  # noqa: E402
+
+# the paper's prototype tile: 10 rows x 10 cols per plane, 2 planes
+_PAPER_CFG = EngineConfig(
+    tile_rows=10, tile_cols=10, mode="deepnet",
+    quant=QuantConfig(w_bits=4, in_bits=8, adc_bits=10))
+
+# serving-tier smoke: d_model=64 over 32-row tiles -> 2 row-tiles per
+# attention weight, the even pairing expansion mode fuses
+_XBAR = EngineConfig(tile_rows=32, tile_cols=32, mode="deepnet",
+                     quant=QuantConfig(w_bits=4, in_bits=8, adc_bits=10))
+
+
+def _paper_params(d: int = 20, d_ff: int = 60, n_layers: int = 2):
+    """A transformer-shaped params tree at the paper's tile geometry:
+    every attention projection spans 2 row-tiles of 10 wordlines (the
+    two stacked planes of one fused pair)."""
+    ks = iter(jax.random.split(jax.random.PRNGKey(0), 16))
+
+    def w(*shape):
+        return jax.random.normal(next(ks), shape) * 0.3
+
+    return {
+        "blocks": {
+            "attn": {"wq": w(n_layers, d, d), "wk": w(n_layers, d, d),
+                     "wv": w(n_layers, d, d),
+                     "wo": w(n_layers, 4, d // 4, d)},
+            "mlp": {"wi": w(n_layers, d, d_ff), "wg": w(n_layers, d, d_ff),
+                    "wo": w(n_layers, d_ff, d)},
+        },
+        "head": w(d, 2 * d),
+    }
+
+
+def bench_expansion(quick: bool = False):
+    t0 = time.perf_counter()
+
+    # -- gate 1: auto policy on the paper's 10x10x2 geometry ----------------
+    ex = CrossbarExecutor(_PAPER_CFG)
+    params = _paper_params()
+    ex.program_params(params, mode_policy="auto")
+    rep = ex.mode_report()
+    agg = rep["aggregate"]
+    # the all-deep-net comparison point: same tree, uniform policy
+    ex_deep = CrossbarExecutor(_PAPER_CFG)
+    ex_deep.program_params(params, mode_policy="deepnet")
+    agg_deep = ex_deep.mode_report()["aggregate"]
+    expansion_layers = {n: e for n, e in rep["layers"].items()
+                        if e["mode"] == "expansion"}
+    mlp_all_deepnet = all(e["mode"] == "deepnet"
+                          for n, e in rep["layers"].items() if ".mlp." in n)
+    attn_head_fused = all(e["fused"] for e in expansion_layers.values())
+
+    # -- gate 2: mixed-mode streams bit-exact, kernel lane vs reference -----
+    n_req, max_new = (2, 3) if quick else (3, 5)
+    cfg = dataclasses.replace(get_config("qwen3_4b", smoke=True),
+                              backend="crossbar", xbar=_XBAR)
+
+    def _serve(use_kernel: bool):
+        c = dataclasses.replace(
+            cfg, xbar=dataclasses.replace(_XBAR, use_kernel=use_kernel))
+        model = build_model(c)
+        params_m = model.init(jax.random.PRNGKey(0))
+        sched = BatchScheduler(model, params_m, n_slots=2, max_len=32,
+                               mode_policy="auto")
+        for rid in range(n_req):
+            prompt = jax.random.randint(
+                jax.random.PRNGKey(rid), (6,), 0,
+                c.vocab - 1).astype(jnp.int32)
+            sched.submit(Request(rid=rid, prompt=prompt, max_new=max_new))
+        done, steps = [], 0
+        while len(done) < n_req and steps < 200:
+            done += sched.step()
+            steps += 1
+        res = model.executor.residency()["A"]["modes"]
+        return {r.rid: r.out for r in done}, res
+
+    calls0 = dict(eng.path_calls)
+    out_ref, modes_ref = _serve(use_kernel=False)
+    ref_calls = eng.path_calls["reference"] - calls0["reference"]
+    calls1 = dict(eng.path_calls)
+    out_kern, modes_kern = _serve(use_kernel=True)
+    kern_calls = eng.path_calls["kernel"] - calls1["kernel"]
+    streams_bit_exact = (len(out_ref) == n_req
+                         and out_ref == out_kern)
+
+    wall = time.perf_counter() - t0
+    return {
+        "us_per_call": wall * 1e6,
+        # gate 1 figures (paper geometry)
+        "tile_geometry": f"{_PAPER_CFG.tile_rows}x{_PAPER_CFG.tile_cols}x2",
+        "n_expansion_layers": agg["n_expansion"],
+        "n_deepnet_layers": agg["n_deepnet"],
+        "mlp_all_deepnet": bool(mlp_all_deepnet),
+        "attn_head_fused": bool(attn_head_fused),
+        "ir_drop_reduction_expansion": agg["ir_drop_reduction_expansion"],
+        "ir_drop_reduction_paper": 0.22,
+        "all_deepnet_policy_n_expansion": agg_deep["n_expansion"],
+        "mode_report_layers": {
+            n: {"mode": e["mode"],
+                "dev_deepnet": e["dev_deepnet"],
+                "dev_expansion": e["dev_expansion"],
+                "ir_drop_reduction": e["ir_drop_reduction"]}
+            for n, e in sorted(rep["layers"].items())},
+        # gate 2 figures (serving streams)
+        "n_requests": n_req,
+        "max_new": max_new,
+        "serving_modes": modes_kern,
+        "streams_bit_exact_kernel_vs_reference": bool(streams_bit_exact),
+        "reference_path_traces": ref_calls,
+        "kernel_path_traces": kern_calls,
+        "serving_modes_agree": modes_ref == modes_kern,
+    }
+
+
+def accepted(res) -> bool:
+    return (res["ir_drop_reduction_expansion"] >= 0.20
+            and res["n_expansion_layers"] > 0
+            and res["n_deepnet_layers"] > 0
+            and res["mlp_all_deepnet"]
+            and res["attn_head_fused"]
+            and res["all_deepnet_policy_n_expansion"] == 0
+            and res["streams_bit_exact_kernel_vs_reference"]
+            and res["serving_modes"]["expansion"] > 0
+            and res["serving_modes_agree"]
+            and res["kernel_path_traces"] > 0)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_expansion.json")
+    args = ap.parse_args(argv)
+    res = bench_expansion(quick=True)
+    print("name,us_per_call,derived")
+    derived = {k: v for k, v in res.items() if k != "us_per_call"}
+    print(f"expansion_mode_policy,{res['us_per_call']:.1f},"
+          f"{json.dumps(derived, default=float)}")
+    from benchmarks.meta import append_trajectory, write_stamped
+    results = {"expansion_mode_policy": res}
+    meta = write_stamped(results, args.json, lane="expansion-smoke")
+    append_trajectory(meta, results)
+    print(f"# wrote {args.json} (sha={meta['git_sha'][:12]})")
+    ok = accepted(res)
+    print(f"# acceptance: auto policy fused "
+          f"{res['n_expansion_layers']} attention/head grids and kept "
+          f"{res['n_deepnet_layers']} MLP grids deep-net on the "
+          f"{res['tile_geometry']} paper geometry; mean worst-case "
+          f"IR-drop reduction "
+          f"{res['ir_drop_reduction_expansion'] * 100:.1f}% "
+          f"(>= 20%: {res['ir_drop_reduction_expansion'] >= 0.20}; "
+          f"paper: 22%); mixed-mode streams kernel-vs-reference "
+          f"bit-exact {res['streams_bit_exact_kernel_vs_reference']} "
+          f"({res['serving_modes']['expansion']} expansion / "
+          f"{res['serving_modes']['deepnet']} deep-net grids served, "
+          f"{res['kernel_path_traces']} kernel lowerings)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

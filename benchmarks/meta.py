@@ -1,10 +1,19 @@
-"""Provenance stamping for BENCH_*.json artifacts.
+"""Provenance stamping + schema gate for BENCH_*.json artifacts.
 
-Every artifact carries a ``_meta`` block (git SHA, jax version, UTC
-timestamp, backend) and appends a one-line summary to
-``benchmarks/trajectory.json`` so bench numbers are comparable across
-PRs — the trajectory starts as an empty ``[]`` and grows one entry per
-local/CI run.
+Every artifact carries a ``_meta`` block (git SHA, jax/jaxlib versions,
+UTC timestamp, backend) and at least one figures dict, and appends a
+one-line summary to ``benchmarks/trajectory.json`` so bench numbers are
+comparable across PRs — the trajectory starts as an empty ``[]`` and
+grows one entry per local/CI run.
+
+Run as a module to validate artifacts before they upload (the CI
+``bench-validate`` step)::
+
+    python benchmarks/meta.py BENCH_*.json            # schema check
+    python benchmarks/meta.py --trajectory [--baseline ref.json]
+
+A malformed artifact or a trajectory that rewrote committed history
+exits non-zero and names the violation — fail loudly, never upload.
 """
 from __future__ import annotations
 
@@ -12,14 +21,20 @@ import datetime
 import json
 import os
 import subprocess
-from typing import Any, Dict
+from typing import Any, Dict, List, Optional
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 TRAJECTORY = os.path.join(_ROOT, "benchmarks", "trajectory.json")
 
+#: the shared BENCH_*.json schema: every artifact's ``_meta`` block must
+#: carry these keys (non-empty strings; timestamp ISO-8601), and the
+#: artifact must hold at least one figures dict beside ``_meta``
+REQUIRED_META = ("git_sha", "jax_version", "jaxlib_version", "backend",
+                 "timestamp_utc")
+
 
 def bench_meta(**extra: Any) -> Dict[str, Any]:
-    """git SHA + jax version + UTC timestamp (+ caller extras)."""
+    """git SHA + jax/jaxlib versions + UTC timestamp (+ caller extras)."""
     try:
         sha = subprocess.check_output(
             ["git", "rev-parse", "HEAD"], cwd=_ROOT,
@@ -27,9 +42,11 @@ def bench_meta(**extra: Any) -> Dict[str, Any]:
     except Exception:  # noqa: BLE001 — not a git checkout / no git binary
         sha = "unknown"
     import jax
+    import jaxlib
     meta = {
         "git_sha": sha,
         "jax_version": jax.__version__,
+        "jaxlib_version": jaxlib.__version__,
         "backend": jax.default_backend(),
         "timestamp_utc": datetime.datetime.now(
             datetime.timezone.utc).isoformat(timespec="seconds"),
@@ -65,3 +82,109 @@ def append_trajectory(meta: Dict[str, Any],
     traj.append({"meta": meta, "us_per_call": summary})
     with open(TRAJECTORY, "w") as f:
         json.dump(traj, f, indent=2, default=float)
+
+
+# -- schema gate (the CI bench-validate step) --------------------------------
+
+def validate_artifact(path: str) -> List[str]:
+    """Check one BENCH_*.json against the shared schema; returns the
+    list of violations (empty = valid)."""
+    problems: List[str] = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable/not JSON ({e})"]
+    if not isinstance(doc, dict):
+        return [f"{path}: top level is {type(doc).__name__}, want object"]
+    meta = doc.get("_meta")
+    if not isinstance(meta, dict):
+        problems.append(f"{path}: missing '_meta' block")
+    else:
+        for key in REQUIRED_META:
+            val = meta.get(key)
+            if not isinstance(val, str) or not val:
+                problems.append(
+                    f"{path}: _meta[{key!r}] missing or not a non-empty "
+                    f"string (got {val!r})")
+        ts = meta.get("timestamp_utc")
+        if isinstance(ts, str) and ts:
+            try:
+                datetime.datetime.fromisoformat(ts)
+            except ValueError:
+                problems.append(
+                    f"{path}: _meta['timestamp_utc'] {ts!r} is not "
+                    f"ISO-8601")
+    figures = {k: v for k, v in doc.items()
+               if not k.startswith("_") and isinstance(v, dict)}
+    if not figures:
+        problems.append(
+            f"{path}: no figures dict beside '_meta' (want at least one "
+            f"non-underscore key holding an object of measurements)")
+    return problems
+
+
+def validate_trajectory(path: str = TRAJECTORY,
+                        baseline: Optional[str] = None) -> List[str]:
+    """Check ``trajectory.json`` parses as a list of stamped entries and
+    that it only APPENDS relative to ``baseline`` (a file holding the
+    pre-run trajectory; CI snapshots the committed file before the bench
+    steps run) — a rewritten or truncated history is a violation."""
+    problems: List[str] = []
+    try:
+        with open(path) as f:
+            traj = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable/not JSON ({e})"]
+    if not isinstance(traj, list):
+        return [f"{path}: top level is {type(traj).__name__}, want list"]
+    for i, entry in enumerate(traj):
+        if not isinstance(entry, dict) or "meta" not in entry:
+            problems.append(f"{path}: entry {i} malformed (want an "
+                            f"object with a 'meta' block)")
+    if baseline is not None:
+        try:
+            with open(baseline) as f:
+                prev = json.load(f)
+        except (OSError, ValueError) as e:
+            return problems + [f"{baseline}: unreadable baseline ({e})"]
+        if not isinstance(prev, list):
+            prev = []
+        if len(traj) < len(prev) or traj[: len(prev)] != prev:
+            problems.append(
+                f"{path}: history rewritten — the first {len(prev)} "
+                f"entries must equal the pre-run trajectory verbatim "
+                f"(runs may only append)")
+    return problems
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="validate BENCH_*.json artifacts and "
+                    "benchmarks/trajectory.json against the shared schema")
+    ap.add_argument("artifacts", nargs="*",
+                    help="BENCH_*.json files to validate")
+    ap.add_argument("--trajectory", action="store_true",
+                    help="also validate benchmarks/trajectory.json")
+    ap.add_argument("--baseline", default=None, metavar="FILE",
+                    help="pre-run trajectory snapshot; the current "
+                         "trajectory must extend it verbatim")
+    args = ap.parse_args(argv)
+    problems: List[str] = []
+    for path in args.artifacts:
+        got = validate_artifact(path)
+        problems += got
+        print(f"{path}: {'OK' if not got else f'{len(got)} violation(s)'}")
+    if args.trajectory or args.baseline:
+        got = validate_trajectory(baseline=args.baseline)
+        problems += got
+        print(f"{TRAJECTORY}: "
+              f"{'OK' if not got else f'{len(got)} violation(s)'}")
+    for p in problems:
+        print(f"FAIL {p}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

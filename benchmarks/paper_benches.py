@@ -23,8 +23,8 @@ from repro.core import engine as eng
 from repro.core import ir_drop as ird
 from repro.core import pipeline as pipe
 from repro.core.crossbar import PlaneConfig, worst_case_power
-from repro.core.device import (MemristorModel, hysteresis_loop,
-                               sample_conductances, transistor_leakage)
+from repro.core.device import (hysteresis_loop, sample_conductances,
+                               transistor_leakage)
 from repro.core.quant import QuantConfig
 from repro.core.timing import PAPER, deepnet_speedup
 

@@ -21,6 +21,7 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 sys.path.insert(0, _ROOT)   # so ``python benchmarks/run.py`` also works
 
 from benchmarks import executor_bench as xb  # noqa: E402
+from benchmarks import expansion_bench as eb  # noqa: E402
 from benchmarks import hotswap_bench as hb  # noqa: E402
 from benchmarks import multiplex_bench as mb  # noqa: E402
 from benchmarks import overlap_kernel_bench as okb  # noqa: E402
@@ -47,6 +48,7 @@ RESIDENCY_BENCHES = [
     ("multiplex_plane_sharing", mb.bench_multiplex),
     ("planebank_3tenant", mb.bench_planebank),
     ("overlap_kernel_decode", okb.bench_overlap_kernel),
+    ("expansion_mode_policy", eb.bench_expansion),
 ]
 
 
@@ -71,7 +73,8 @@ def main(argv=None) -> None:
     quick_benches = [(n, f) for n, f in RESIDENCY_BENCHES
                      if n not in ("hotswap_overlap",
                                   "multiplex_plane_sharing",
-                                  "overlap_kernel_decode")]
+                                  "overlap_kernel_decode",
+                                  "expansion_mode_policy")]
     benches = ([(n, lambda f=f: f(quick=True)) for n, f in quick_benches]
                if args.quick else
                BENCHES + [(n, f) for n, f in RESIDENCY_BENCHES])

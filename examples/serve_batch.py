@@ -9,8 +9,8 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models.model import build_model
-from repro.serve.engine import (BatchScheduler, Request, greedy_generate,
-                                make_decode_step)
+from repro.serve.engine import (BatchScheduler, Request,
+                                greedy_generate)
 
 cfg = get_config("qwen3-4b", smoke=True)
 model = build_model(cfg)

@@ -6,7 +6,6 @@ on the CPU container; --d-model 768 --layers 12 gives the ~100M variant
 Run: PYTHONPATH=src python examples/train_lm.py --steps 120
 """
 import argparse
-import dataclasses
 import time
 
 import jax

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Optional
 
 ARCH_IDS = [
     "whisper_base", "rwkv6_3b", "grok1_314b", "phi35_moe", "qwen2_vl_72b",

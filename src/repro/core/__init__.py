@@ -1,12 +1,25 @@
 """CrossStack core: device physics, crossbar operating modes, and the tiled
 crossbar execution engine (the paper's primary contribution as a composable
 JAX module)."""
+
 from repro.core.timing import PAPER, CrossStackParams, deepnet_speedup
 from repro.core.quant import QuantConfig
-from repro.core.engine import (EngineConfig, ProgrammedLinear, program,
-                               matmul, linear)
+from repro.core.engine import (
+    EngineConfig,
+    ProgrammedLinear,
+    program,
+    matmul,
+    linear,
+)
 
 __all__ = [
-    "PAPER", "CrossStackParams", "deepnet_speedup", "QuantConfig",
-    "EngineConfig", "ProgrammedLinear", "program", "matmul", "linear",
+    "PAPER",
+    "CrossStackParams",
+    "deepnet_speedup",
+    "QuantConfig",
+    "EngineConfig",
+    "ProgrammedLinear",
+    "program",
+    "matmul",
+    "linear",
 ]

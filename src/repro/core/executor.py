@@ -56,16 +56,26 @@ two-tenant multiplex — one code path, not two special cases.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import hashlib
 import math
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import engine, planes
+from repro.core import engine, ir_drop, planes
 from repro.core.engine import EngineConfig
 from repro.core.planes import ChunkedProgram, PlaneBank, SwapPlan
+
+#: per-weight read modes a policy may assign ("auto" resolves to one)
+READ_MODES = ("expansion", "deepnet")
+
+#: a mode policy: None (= cfg.mode for every weight), a uniform mode,
+#: "auto" (IR-drop-aware per-layer selection), or a mapping from weight
+#: name / dotted name fragment to a mode (values may themselves be
+#: "auto"; the special key "default" covers unmatched weights)
+ModePolicy = Union[None, str, Dict[str, str]]
 
 # weight-leaf classification: final path key -> contracted input axes,
 # in the context of its parent module key
@@ -130,6 +140,13 @@ class CrossbarExecutor:
         # one per decode step
         self._leak_zero: Optional[jax.Array] = None
         self._leak_live: Optional[jax.Array] = None
+        # per-weight read mode (PR 6): mode-variant EngineConfigs are
+        # cached so every weight programmed in the same mode shares one
+        # frozen cfg (stable jit cache keys — zero re-traces when reads
+        # mix modes), plus the resolved policy + reasons for mode_report
+        self._mode_cfgs: Dict[str, EngineConfig] = {cfg.mode: cfg}
+        self._mode_reasons: Dict[Tuple[str, str], str] = {}
+        self._ir_scores: Dict[Tuple[int, int], Dict[str, Any]] = {}
         self.stats = {"programmed": 0, "cache_hits": 0, "program_walks": 0,
                       "swaps": 0, "swap_chunks": 0}
 
@@ -183,12 +200,21 @@ class CrossbarExecutor:
 
     def residency(self) -> Dict[str, Dict[str, Any]]:
         """The unified residency registry: for every resident tenant, the
-        checkpoint-content fingerprint its planes were programmed from
-        and its monotone deploy version — the one structure dashboards,
-        schedulers and swap tooling read instead of poking bank slots."""
-        return {t: {"fingerprint": self.fingerprint(tenant=t),
-                    "version": self.version(t)}
-                for t in self.tenants}
+        checkpoint-content fingerprint its planes were programmed from,
+        its monotone deploy version, and its per-mode weight counts
+        (``modes``: how many banks serve it from an expansion-fused pair
+        vs a deep-net slot) — the one structure dashboards, schedulers
+        and swap tooling read instead of poking bank slots."""
+        out: Dict[str, Dict[str, Any]] = {}
+        for t in self.tenants:
+            n_exp = sum(1 for b in self._cache.values()
+                        if b.has_tenant(t) and b.is_fused(t))
+            n_deep = sum(1 for b in self._cache.values()
+                         if b.has_tenant(t)) - n_exp
+            out[t] = {"fingerprint": self.fingerprint(tenant=t),
+                      "version": self.version(t),
+                      "modes": {"expansion": n_exp, "deepnet": n_deep}}
+        return out
 
     # -- write-plane leakage (deep-net overlap reads) ------------------------
 
@@ -220,6 +246,173 @@ class CrossbarExecutor:
             self._leak_zero = jnp.float32(0.0)
         return self._leak_zero
 
+    # -- per-weight read-mode policy (PR 6) ----------------------------------
+
+    def _read_cfg(self, mode: str) -> EngineConfig:
+        """The engine config a read in ``mode`` uses: ``self.cfg`` when
+        the mode matches, else a cached ``dataclasses.replace`` variant.
+        Programming is mode-independent (one ``ProgrammedLinear`` serves
+        both read paths), so flipping mode is purely a read-time choice
+        of ADC grouping (``rows_per_adc``)."""
+        cfg = self._mode_cfgs.get(mode)
+        if cfg is None:
+            cfg = self._mode_cfgs[mode] = dataclasses.replace(
+                self.cfg, mode=mode)
+        return cfg
+
+    def _row_tiles(self, k: int) -> int:
+        return -(-k // self.cfg.tile_rows)
+
+    def _auto_mode(self, name: str, k: int) -> Tuple[str, str]:
+        """IR-drop-aware per-layer selection (ROADMAP item 2).
+
+        Expansion mode cuts worst-case IR deviation (paper: 22%) but
+        fuses both planes read-only — no write shadow, so no overlapped
+        reprogramming.  The policy therefore spends the fused pairs on
+        accuracy-critical layers (attention projections and the LM head,
+        where logit fidelity is most sensitive) and keeps the swap-heavy
+        MLP mats — the bulk of reprogram chunks — in deep-net layout.
+        A layer only qualifies when its row-tiles pair up evenly
+        (adjacent row-tiles map onto the two planes; an odd count would
+        hit the per-plane ADC fallback and forfeit the IR benefit).
+        """
+        t = self._row_tiles(k)
+        parts = name.split(".")
+        critical = name == "head" or "attn" in parts or "xattn" in parts
+        if not critical:
+            return "deepnet", "auto: swap-heavy (mlp) — keep write shadow"
+        if t < 2 or t % 2:
+            return ("deepnet",
+                    f"auto: {t} row-tile(s) cannot pair across planes")
+        return "expansion", "auto: accuracy-critical (attention/head)"
+
+    def _validate_policy(self, policy: ModePolicy) -> None:
+        """Reject malformed policies BEFORE any residency state mutates
+        — a refused ``program_params`` call must leave the executor
+        exactly as it found it."""
+        if policy is None:
+            return
+        valid = READ_MODES + ("auto",)
+        if isinstance(policy, str):
+            if policy not in valid:
+                raise ValueError(
+                    f"unknown mode policy {policy!r}: want one of "
+                    f"{valid} or a name->mode mapping")
+            return
+        for pat, mode in policy.items():
+            if mode not in valid:
+                raise ValueError(
+                    f"mode policy entry {pat!r} maps to {mode!r}; want "
+                    f"one of {valid}")
+
+    def _resolve_mode(self, policy: ModePolicy, name: str,
+                      k: int) -> Tuple[str, str]:
+        """(mode, reason) for one weight under ``policy``.
+
+        Mapping keys match the full dotted name, any contiguous dotted
+        fragment of it (``"attn"``, ``"attn.wq"``, ``"blocks.0"``; the
+        most specific — most segments — wins), or ``"default"`` for the
+        rest; values may be ``"auto"``.  Unmatched weights without a
+        ``"default"`` entry fall back to deep-net, the swap-capable
+        layout.
+        """
+        if policy is None:
+            return self.cfg.mode, "engine default (cfg.mode)"
+        if isinstance(policy, str):
+            if policy == "auto":
+                return self._auto_mode(name, k)
+            if policy not in READ_MODES:
+                raise ValueError(
+                    f"unknown mode policy {policy!r}: want one of "
+                    f"{READ_MODES + ('auto',)} or a name->mode mapping")
+            return policy, f"uniform policy {policy!r}"
+        if name in policy:
+            mode, why = policy[name], f"policy[{name!r}]"
+        else:
+            hay = f".{name}."
+            best = None
+            for pat in policy:
+                if pat != "default" and f".{pat}." in hay:
+                    if (best is None
+                            or pat.count(".") > best.count(".")
+                            or (pat.count(".") == best.count(".")
+                                and len(pat) > len(best))):
+                        best = pat
+            if best is not None:
+                mode, why = policy[best], f"policy[{best!r}]"
+            else:
+                mode, why = policy.get("default", "deepnet"), "policy default"
+        if mode == "auto":
+            return self._auto_mode(name, k)
+        if mode not in READ_MODES:
+            raise ValueError(
+                f"{name}: mode policy maps to {mode!r}; want one of "
+                f"{READ_MODES + ('auto',)}")
+        return mode, why
+
+    def mode_for(self, name: str, tenant: Optional[str] = None) -> str:
+        """The read mode the named weight is programmed in for a tenant
+        (ground truth is bank residency, not the requested policy)."""
+        return self._cache[name].mode_for(self._resolve_tenant(tenant))
+
+    def _tile_scores(self, k: int, n: int,
+                     max_nodes: int = 1024) -> Dict[str, Any]:
+        """Worst-case IR-deviation scores at a weight's tile geometry
+        (nodal solves, cached per effective tile)."""
+        key = (min(k, self.cfg.tile_rows), min(n, self.cfg.tile_cols))
+        score = self._ir_scores.get(key)
+        if score is None:
+            score = self._ir_scores[key] = ir_drop.mode_ir_report(
+                key[0], key[1], r_wire=self.cfg.params.r_wire,
+                params=self.cfg.params, max_nodes=max_nodes)
+        return score
+
+    def mode_report(self, tenant: Optional[str] = None) -> Dict[str, Any]:
+        """Per-weight mode choices with their IR-drop economics.
+
+        For every resident weight of the tenant: the programmed mode,
+        why the policy chose it, and the worst-case IR deviation of a
+        tile at its geometry under each layout (``ir_drop.mode_ir_report``
+        — exact nodal solves at the all-SET/full-drive operating point,
+        planar 2n-row tile vs the CrossStack fused pair).  The aggregate
+        block carries the mean reduction over expansion-programmed
+        layers — the paper's headline 22% figure, asserted >= 20% by
+        benchmarks/expansion_bench.py on the paper geometry.
+        """
+        tenant = self._resolve_tenant(tenant)
+        layers: Dict[str, Any] = {}
+        for name in sorted(self._cache):
+            bank = self._cache[name]
+            if not bank.has_tenant(tenant):
+                continue
+            pw = bank.active_for(tenant)
+            score = self._tile_scores(pw.k, pw.n)
+            layers[name] = {
+                "mode": bank.mode_for(tenant),
+                "fused": bank.is_fused(tenant),
+                "row_tiles": int(pw.pos.shape[1]),
+                "k": pw.k, "n": pw.n,
+                "reason": self._mode_reasons.get((tenant, name), ""),
+                "dev_deepnet": score["dev_deepnet"],
+                "dev_expansion": score["dev_expansion"],
+                "ir_drop_reduction": score["ir_drop_reduction"],
+            }
+        exp = [e for e in layers.values() if e["mode"] == "expansion"]
+        agg = {
+            "tenant": tenant,
+            "n_expansion": len(exp),
+            "n_deepnet": len(layers) - len(exp),
+            "tile_rows": self.cfg.tile_rows,
+            "tile_cols": self.cfg.tile_cols,
+            "stack_planes": self.stack_planes,
+            # mean worst-case IR-drop reduction the fused pairs buy, over
+            # the layers actually programmed in expansion layout
+            "ir_drop_reduction_expansion": (
+                sum(e["ir_drop_reduction"] for e in exp) / len(exp)
+                if exp else 0.0),
+        }
+        return {"layers": layers, "aggregate": agg}
+
     # -- programming (the write path; once per deployment) -----------------
 
     @staticmethod
@@ -240,18 +433,25 @@ class CrossbarExecutor:
                 out.append((".".join(parts), w, n_in))
         return out
 
-    def program_params(self, params: Any, tenant: Optional[str] = None
-                       ) -> int:
+    def program_params(self, params: Any, tenant: Optional[str] = None,
+                       mode_policy: ModePolicy = None) -> int:
         """Program every eligible linear weight in ``params`` onto the
         named tenant's plane set; idempotent per tenant.
 
-        A new tenant claims one free plane slot in every bank (up to the
-        ``stack_planes`` bound); the banks then multiplex the resident
-        checkpoints from one physical stack.  Returns the number of
-        weights *newly* programmed this walk; weights already resident
-        count as ``stats['cache_hits']``.
+        A new tenant claims one free plane slot in every bank — TWO in
+        banks where ``mode_policy`` programs the weight in expansion
+        layout (the fused pair: both planes RE-high, holding the
+        row-tile halves of one doubled-input weight).  ``mode_policy``
+        is ``None`` (every weight reads in ``cfg.mode``), a uniform
+        ``"expansion"``/``"deepnet"``, ``"auto"`` (IR-drop-aware
+        per-layer selection; see :meth:`mode_report`), or a name->mode
+        mapping.  Re-walking the same tree is a cache hit — but
+        requesting a *different* mode for an already-resident weight is
+        an error: modes are physical plane layout, not a read flag.
+        Returns the number of weights newly programmed this walk.
         """
         tenant = self._resolve_tenant(tenant)
+        self._validate_policy(mode_policy)
         if tenant not in self._programmed_leaves:
             self._require_free_plane(tenant)
         leaves = jax.tree_util.tree_flatten_with_path(params)[0]
@@ -272,21 +472,35 @@ class CrossbarExecutor:
         self.stats["program_walks"] += 1
         new = 0
         for name, w, n_in in self._eligible(leaves):
-            new += self._program_one(name, w, n_in, tenant)
+            if mode_policy is None:
+                # no preference: resident weights keep their layout,
+                # new ones program in the engine's cfg.mode
+                mode, reason = None, "engine default (cfg.mode)"
+            else:
+                k = math.prod(w.shape[:n_in])
+                mode, reason = self._resolve_mode(mode_policy, name, k)
+            new += self._program_one(name, w, n_in, tenant, mode, reason)
         if new:
             self._versions[tenant] = self._versions.get(tenant, 0) + 1
         return new
 
     def _require_free_plane(self, tenant: str) -> None:
         """A first-time tenant needs one free slot per bank.  Resident
-        tenants and an in-flight staged swap's reserved slot all occupy
-        planes; admitting a tenant past the bound would either overflow
-        the stack or steal the very plane an open swap will land on at
-        promote() (making that promotion fail half-applied)."""
+        tenants (expansion-fused ones hold TWO slots in their banks), an
+        in-flight staged swap's reserved slot, and fused companions all
+        occupy planes; admitting a tenant past the bound would either
+        overflow the stack or steal the very plane an open swap will
+        land on at promote() (making that promotion fail half-applied).
+        Bank slot roles are the ground truth once banks exist; before
+        any bank does, the tenant count is."""
         staging = self._swap is not None and not self._swap.in_place
-        occupied = len(self._programmed_leaves) + (1 if staging else 0)
-        if occupied < self.stack_planes:
-            return
+        if self._cache:
+            if min(b.n_free for b in self._cache.values()) > 0:
+                return
+        else:
+            occupied = len(self._programmed_leaves) + (1 if staging else 0)
+            if occupied < self.stack_planes:
+                return
         if staging:
             raise RuntimeError(
                 f"cannot deploy new tenant {tenant!r} while a hot-swap is "
@@ -298,9 +512,16 @@ class CrossbarExecutor:
             f"{tenant!r}")
 
     def _program_one(self, name: str, w: jax.Array, n_in: int,
-                     tenant: str) -> int:
+                     tenant: str, mode: Optional[str], reason: str) -> int:
         bank = self._cache.get(name)
         if bank is not None and bank.has_tenant(tenant):
+            have = bank.mode_for(tenant)
+            if mode is not None and have != mode:
+                raise RuntimeError(
+                    f"{name}: tenant {tenant!r} is already resident in "
+                    f"{have} layout but the policy asks for {mode}; mode "
+                    f"is physical plane layout — evict_tenant() and "
+                    f"re-program to change it")
             self.stats["cache_hits"] += 1
             return 0
         k = math.prod(w.shape[:n_in])
@@ -316,8 +537,18 @@ class CrossbarExecutor:
                     f"{name}: tenant {tenant!r} weight shape "
                     f"{w2d.shape} != the bank's tile geometry "
                     f"{(ref.k, ref.n)}; tenants share physical stacks")
-        bank.assign(tenant, engine.program(w2d, self.cfg),
-                    planes.fingerprint_weight(w2d))
+        # programming is mode-independent: the same ProgrammedLinear
+        # serves both read paths; mode decides slot layout (fused pair
+        # vs single plane) and the read-time ADC grouping
+        if mode is None:
+            mode = self.cfg.mode
+        pw = engine.program(w2d, self.cfg)
+        fp = planes.fingerprint_weight(w2d)
+        if mode == "expansion":
+            bank.assign_fused(tenant, pw, fp)
+        else:
+            bank.assign(tenant, pw, fp)
+        self._mode_reasons[(tenant, name)] = reason
         self.stats["programmed"] += 1
         return 1
 
@@ -327,7 +558,8 @@ class CrossbarExecutor:
                 and all(a is b for a, b in zip(prog, leaves)))
 
     def ensure_programmed(self, params: Any,
-                          tenant: Optional[str] = None) -> None:
+                          tenant: Optional[str] = None,
+                          mode_policy: ModePolicy = None) -> None:
         """Program on the first eager call; afterwards verify the caller is
         serving the SAME params tree the tenant's tiles were programmed
         from.
@@ -355,7 +587,7 @@ class CrossbarExecutor:
             return
         # unseen tree: program it (first call), or raise (different tree /
         # a tree extending a manually-programmed subset) via program_params
-        self.program_params(params, tenant)
+        self.program_params(params, tenant, mode_policy=mode_policy)
 
     # -- read path ----------------------------------------------------------
 
@@ -378,6 +610,16 @@ class CrossbarExecutor:
         path).  Reads of a tenant whose own planes are mid-write (an
         in-place tenant swap) are refused — those wordlines are driving
         write pulses, not read pulses.
+
+        Per-weight mode dispatch (PR 6): the read path follows the
+        bank's *residency layout* — an expansion-fused pair reads with
+        doubled-input ADC grouping through a cached mode-variant cfg, a
+        deep-net slot reads as before.  Mode is trace-time Python state
+        fixed at program time, so mixed-mode models compile each
+        weight's read exactly once; and a fused pair never hosts an
+        in-flight write, so its reads carry NO leak term — the leak
+        operand keeps flowing to the deep-net weights only, preserving
+        the zero-re-trace property at swap-window boundaries.
         """
         tenant = self._resolve_tenant(tenant)
         if (self._swap is not None and self._swap.in_place
@@ -385,20 +627,28 @@ class CrossbarExecutor:
             raise RuntimeError(
                 f"tenant {tenant!r} planes are mid-write (in-place swap "
                 f"in flight); reads resume after promote()")
-        pw = self._cache[name].active_for(tenant)
+        bank = self._cache[name]
+        pw = bank.active_for(tenant)
+        mode = bank.mode_for(tenant)
+        cfg = self._read_cfg(mode)
         n_in = self._n_in[name]
         lead = x.shape[:-n_in]
         k = math.prod(x.shape[-n_in:])
         if k != pw.k:
             raise ValueError(f"{name}: input dim {k} != programmed {pw.k}")
-        if self._leak_override is not None:
+        if mode == "expansion" and bank.is_fused(tenant):
+            # both planes RE-high: the fused pair's shared column never
+            # sees a write shadow, so no leakage term — a trace-time
+            # constant, not a traced operand (mode is fixed per weight)
+            leak = 0.0
+        elif self._leak_override is not None:
             leak = self._leak_override
         else:
-            leak = (planes.write_leak_codes(self.cfg)
-                    if self._swap is not None and self.cfg.swap_leakage
+            leak = (planes.write_leak_codes(cfg)
+                    if self._swap is not None and cfg.swap_leakage
                     else 0.0)
         y = engine.matmul(x.reshape(*lead, k).astype(jnp.float32), pw,
-                          self.cfg, leak_codes=leak)
+                          cfg, leak_codes=leak)
         return y.reshape(*lead, *w.shape[n_in:]).astype(x.dtype)
 
     # -- fingerprints / versioning -------------------------------------------
@@ -469,6 +719,15 @@ class CrossbarExecutor:
         recalibrated conductances — not a different architecture).
         Returns the chunk work-list; drive it with :meth:`write_chunks`
         and finish with :meth:`promote`.
+
+        Expansion-fused weights refuse overlap writes: a fused pair
+        holds both of its planes RE-high for the tenant's reads, so
+        there is no write shadow to stage into — the paper's IR-drop
+        win trades away read-under-write.  A tenant with ANY fused
+        weight therefore always swaps **in place** (its reads pause for
+        the window; deep-net tenants sharing the stack keep serving),
+        and the anchor tenant — whose reads may never pause — cannot
+        swap at all while fused.
         """
         self._check_tenant(tenant)
         if not self._cache:
@@ -478,8 +737,23 @@ class CrossbarExecutor:
             raise RuntimeError("a hot-swap is already in flight; promote() "
                                "or abort_swap() first")
         resident = tenant in self._programmed_leaves
+        fused = resident and any(
+            bank.is_fused(tenant) for bank in self._cache.values()
+            if bank.has_tenant(tenant))
+        if fused and tenant == self.anchor:
+            raise RuntimeError(
+                f"tenant {tenant!r} holds expansion-fused planes (both "
+                f"RE high — no write shadow) and anchors the stack, so "
+                f"its reads cannot pause for an in-place rewrite; "
+                f"expansion-mode anchor deploys are cold deploys "
+                f"(evict/reprogram), or program the anchor in deep-net "
+                f"layout to hot-swap it")
         n_free = min(bank.n_free for bank in self._cache.values())
-        if n_free == 0:
+        if fused:
+            # overlap refused: rewrite the fused tenant's own pair with
+            # reads paused, whatever free planes exist
+            n_free = 0
+        if n_free == 0 and not fused:
             others = sorted(t for t in self._programmed_leaves
                             if t != tenant)
             if not resident:

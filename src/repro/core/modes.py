@@ -191,6 +191,50 @@ def bank_advance(state: BankState) -> BankState:
     return bank_set_read(state, bank_write_idx(state))
 
 
+def bank_fused_pair(state: BankState, idx_top: jax.Array | int = 0,
+                    idx_bot: jax.Array | int = 1
+                    ) -> tuple[jax.Array, jax.Array]:
+    """The two planes of an expansion-fused pair inside an N-high bank.
+
+    Expansion mode fuses exactly two planes (they share one middle
+    electrode); in a taller bank the *other* N-2 planes stay independent
+    — resident for other tenants, staging, or dark.  Returns the
+    (g_top, g_bot) conductance pair; indices may be traced.
+    """
+    g_top = jnp.take(state.g, jnp.asarray(idx_top), axis=0)
+    g_bot = jnp.take(state.g, jnp.asarray(idx_bot), axis=0)
+    return g_top, g_bot
+
+
+def bank_expansion_mac(state: BankState, v_top: jax.Array,
+                       v_bot: jax.Array, cfg: StackConfig,
+                       idx_top: jax.Array | int = 0,
+                       idx_bot: jax.Array | int = 1) -> jax.Array:
+    """Expansion-mode MAC on a fused plane pair of an N-high bank.
+
+    Both fused planes' RE are high, so their currents sum by KCL on the
+    shared column — :func:`expansion_mac` lifted to the bank geometry.
+    ``bank_expansion_mac(bank_from_pair(s), ...)`` is bit-exact with
+    ``expansion_mac(s, ...)`` at N = 2 (pinned in tests).  Unlike
+    :func:`bank_read`, no leakage term applies: a fused pair never hosts
+    an in-flight write (its executor-scale bank refuses overlap writes).
+    """
+    g_top, g_bot = bank_fused_pair(state, idx_top, idx_bot)
+    return (crossbar.mac(v_top, g_top, cfg.plane)
+            + crossbar.mac(v_bot, g_bot, cfg.plane))
+
+
+def bank_expansion_mac_ir(state: BankState, v_top: jax.Array,
+                          v_bot: jax.Array, cfg: StackConfig,
+                          idx_top: jax.Array | int = 0,
+                          idx_bot: jax.Array | int = 1) -> jax.Array:
+    """Fused-pair MAC through the exact shared-column nodal solve."""
+    g_top, g_bot = bank_fused_pair(state, idx_top, idx_bot)
+    i_out, _, _ = ir_drop.solve_crossstack(
+        g_top, g_bot, v_top, v_bot, cfg.params.r_wire)
+    return i_out
+
+
 def bank_layer(state: BankState, v_in: jax.Array, g_next: jax.Array,
                cfg: StackConfig) -> tuple[jax.Array, BankState]:
     """One deep-net beat on an N-high bank: read the active plane, write

@@ -26,7 +26,6 @@ import dataclasses
 from typing import Callable, List, NamedTuple, Sequence
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import engine as eng
 from repro.core.timing import PAPER, CrossStackParams, read_time

@@ -67,10 +67,12 @@ def fingerprint_tiles(pw: ProgrammedLinear) -> str:
     return h.hexdigest()
 
 
-#: slot lifecycle roles: free -> staging -> resident(tenant) -> free
+#: slot lifecycle roles: free -> staging -> resident(tenant) -> free,
+#: plus the fused companion of an expansion-programmed resident slot
 ROLE_FREE = "free"
 ROLE_STAGING = "staging"
 ROLE_RESIDENT = "resident"
+ROLE_FUSED = "fused"
 
 
 @dataclasses.dataclass
@@ -103,6 +105,13 @@ class PlaneBank:
       * ``staging`` — reserved write target of an in-flight
         :class:`SwapPlan`; lands a plane only at promotion.
       * ``free`` — unprogrammed, claimable by a new tenant or a swap.
+      * ``fused(T)`` — the companion plane of an *expansion-programmed*
+        resident slot: the two planes share one middle electrode and
+        hold the alternating row-tile halves of one doubled-input
+        weight (``modes.expansion_mac`` at ``ProgrammedLinear`` scale).
+        Both planes' RE are permanently high for T's reads, so a fused
+        pair can never host a concurrent write — overlap swaps are
+        refused at the executor.
 
     ``stack_planes = 2`` with one tenant reproduces the classic
     ping-pong pair (resident + free/staging); with two tenants it is the
@@ -133,6 +142,26 @@ class PlaneBank:
 
     def has_tenant(self, tenant: str) -> bool:
         return self.slot_of(tenant) is not None
+
+    def fused_companion(self, tenant: str) -> Optional[PlaneSlot]:
+        for s in self.slots:
+            if s.role == ROLE_FUSED and s.tenant == tenant:
+                return s
+        return None
+
+    def is_fused(self, tenant: str) -> bool:
+        """True when the tenant's weight is expansion-programmed across a
+        fused plane pair (read mode "expansion")."""
+        return self.fused_companion(tenant) is not None
+
+    def mode_for(self, tenant: str) -> str:
+        """The read mode the tenant's residency implies."""
+        self._resident_slot(tenant)
+        return "expansion" if self.is_fused(tenant) else "deepnet"
+
+    def n_slots_of(self, tenant: str) -> int:
+        """Plane slots the tenant occupies: 2 for a fused pair, else 1."""
+        return 2 if self.is_fused(tenant) else 1
 
     def _resident_slot(self, tenant: str) -> PlaneSlot:
         s = self.slot_of(tenant)
@@ -174,7 +203,9 @@ class PlaneBank:
 
     def assign(self, tenant: str, pw: ProgrammedLinear, fp: str) -> None:
         """Program ``pw`` as the named tenant's resident plane: rewrite
-        the tenant's own slot if resident, else claim a free slot."""
+        the tenant's own slot if resident (content only — an existing
+        fused pair keeps its companion, so in-place reprograms preserve
+        the read mode), else claim a free slot in deep-net layout."""
         s = self.slot_of(tenant) or self._first(ROLE_FREE)
         if s is None:
             raise RuntimeError(
@@ -184,6 +215,41 @@ class PlaneBank:
                 + f"; evict a tenant before deploying {tenant!r}")
         s.plane, s.fp = pw, fp
         s.role, s.tenant = ROLE_RESIDENT, tenant
+
+    def assign_fused(self, tenant: str, pw: ProgrammedLinear,
+                     fp: str) -> None:
+        """Program ``pw`` as the tenant's expansion-fused plane pair.
+
+        The resident slot carries the programmed tiles (all row-tile
+        halves — adjacent pairs map onto the two physical planes); its
+        companion slot is claimed as the pair's second plane with RE
+        permanently high, so it can never be a write target.  A tenant
+        already fused here is rewritten in place; a deep-net resident
+        cannot silently become fused — mode changes reprogram physical
+        planes, so the caller must evict first.
+        """
+        s = self.slot_of(tenant)
+        if s is not None:
+            if not self.is_fused(tenant):
+                raise RuntimeError(
+                    f"{self.name}: tenant {tenant!r} is resident in "
+                    f"deep-net layout; a mode change reprograms physical "
+                    f"planes — evict the tenant (or swap) first")
+            s.plane, s.fp = pw, fp
+            return
+        free = [sl for sl in self.slots if sl.role == ROLE_FREE]
+        if len(free) < 2:
+            raise RuntimeError(
+                f"{self.name}: an expansion-fused weight needs TWO free "
+                f"planes (both RE high), found {len(free)} of "
+                f"{self.n_planes} — residents {sorted(self.residents)}"
+                + (" plus a staging slot" if self.staging else "")
+                + f"; evict a tenant or program {tenant!r} in deep-net "
+                f"layout")
+        prim, comp = free[0], free[1]
+        prim.plane, prim.fp = pw, fp
+        prim.role, prim.tenant = ROLE_RESIDENT, tenant
+        comp.role, comp.tenant = ROLE_FUSED, tenant
 
     def reserve_staging(self) -> PlaneSlot:
         """Mark a free slot as the write target of an in-flight swap (RE
@@ -223,10 +289,15 @@ class PlaneBank:
             s.role, s.tenant = ROLE_FREE, None
 
     def evict(self, tenant: str) -> None:
-        """Evict a resident tenant; its slot reverts to free."""
+        """Evict a resident tenant; its slot — and, for an
+        expansion-fused pair, the companion plane — reverts to free."""
         s = self._resident_slot(tenant)
+        comp = self.fused_companion(tenant)
         s.plane, s.fp = None, None
         s.role, s.tenant = ROLE_FREE, None
+        if comp is not None:
+            comp.plane, comp.fp = None, None
+            comp.role, comp.tenant = ROLE_FREE, None
 
     # -- geometry ------------------------------------------------------------
 

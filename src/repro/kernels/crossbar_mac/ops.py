@@ -5,6 +5,14 @@ and un-padding, so ``engine.matmul(..., use_kernel=True)`` is a drop-in for
 the jnp reference path — including deep-net overlap reads, where the write
 plane's common-mode leakage arrives as a traced ``leak_codes`` scalar
 (changing its value between decode steps never re-lowers the kernel).
+
+Expansion-fused reads (per-weight mode policy, ``executor.mode_report``)
+ride this same lane: the executor dispatches them through its cached
+expansion-mode cfg, so ``cfg.rows_per_adc`` doubles the pre-ADC grouping
+and the fused pair's planes convert as one analog sum — with
+``leak_codes`` pinned to the Python constant 0.0 at trace time, since a
+fused pair never hosts an in-flight write.  Mixed-mode models therefore
+lower one kernel variant per mode, not per swap-window state.
 """
 from __future__ import annotations
 

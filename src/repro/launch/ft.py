@@ -24,9 +24,7 @@ from __future__ import annotations
 import os
 import signal
 import time
-from typing import Any, Optional
-
-import jax
+from typing import Any
 
 from repro.checkpoint.manager import CheckpointManager
 

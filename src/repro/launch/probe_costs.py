@@ -10,7 +10,7 @@ import argparse
 import json
 import time
 
-from repro.configs import ALIASES, SHAPES, get_config
+from repro.configs import SHAPES, get_config
 from repro.launch.policy import microbatches_for
 
 

@@ -27,6 +27,15 @@ is 2; taller stacks host more tenants and/or a free staging plane);
 slot split and admission order.  Combined with ``--hot-swap``, the swap
 targets the LAST tenant: its planes reprogram under the other tenants'
 uninterrupted traffic.
+
+``--mode-policy auto|expansion|deepnet|name=mode,...`` makes read mode a
+per-weight bank policy (the paper's expansion mode at the serving tier):
+expansion-programmed weights fuse two planes into one doubled-input
+crossbar — both RE high, cutting worst-case IR drop by ~22% but giving
+up the write shadow — while deep-net weights keep overlapped hot-swaps.
+``auto`` picks expansion for accuracy-critical layers (attention/head)
+and deep-net for swap-heavy MLP mats, scored by the exact nodal IR-drop
+solves; the per-layer choices and deltas print via ``mode_report()``.
 """
 from __future__ import annotations
 
@@ -40,7 +49,30 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models.model import build_model
-from repro.serve.engine import BatchScheduler, Request, greedy_generate
+from repro.serve.engine import BatchScheduler, Request
+
+
+def parse_mode_policy(spec):
+    """``--mode-policy`` parsing: ``auto`` | ``expansion`` | ``deepnet``
+    | ``name=mode[,name=mode...]`` (names may be dotted fragments like
+    ``attn`` or ``blocks.0.mlp.wi``; ``default=<mode>`` covers the rest;
+    mapped modes may themselves be ``auto``)."""
+    if spec is None:
+        return None
+    if spec in ("auto", "expansion", "deepnet"):
+        return spec
+    policy = {}
+    for item in spec.split(","):
+        name, sep, mode = item.partition("=")
+        name, mode = name.strip(), mode.strip()
+        if not sep or not name or mode not in ("expansion", "deepnet",
+                                               "auto"):
+            raise SystemExit(
+                f"--mode-policy: bad entry {item!r} (want auto | "
+                f"expansion | deepnet | name=mode,... with mode one of "
+                f"expansion/deepnet/auto)")
+        policy[name] = mode
+    return policy
 
 
 def resolve_swap_params(spec: str, model, params):
@@ -99,6 +131,19 @@ def main(argv=None):
                     help="per-tenant QoS weights for --multiplex (one "
                          "float per spec, e.g. 2,1,1): weighted slot "
                          "split + admission order in the scheduler")
+    ap.add_argument("--mode-policy", default=None, metavar="POLICY",
+                    help="per-weight crossbar read mode: auto (IR-drop-"
+                         "aware — expansion for attention/head, deep-net "
+                         "for swap-heavy MLP), expansion, deepnet, or "
+                         "name=mode,... (e.g. head=expansion,default="
+                         "auto); requires --backend crossbar")
+    ap.add_argument("--tile-rows", type=int, default=None,
+                    help="override crossbar tile rows (wordlines per "
+                         "plane); expansion fusing pairs row-tiles "
+                         "across the two planes, so it needs an even "
+                         "count >= 2 per weight — e.g. --tile-rows 32 "
+                         "splits the smoke model's d_model=64 weights "
+                         "into 2 row-tiles")
     ap.add_argument("--swap-after", type=int, default=None,
                     help="begin the swap once this many requests finished "
                          "(default: half)")
@@ -109,12 +154,19 @@ def main(argv=None):
         raise SystemExit("--hot-swap requires --backend crossbar")
     if args.multiplex and args.backend != "crossbar":
         raise SystemExit("--multiplex requires --backend crossbar")
+    if args.mode_policy and args.backend != "crossbar":
+        raise SystemExit("--mode-policy requires --backend crossbar")
+    mode_policy = parse_mode_policy(args.mode_policy)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if cfg.family in ("encdec", "vlm", "rwkv6", "zamba2"):
         raise SystemExit("scheduler demo targets decoder LMs; "
                          "see examples/serve_batch.py for other families")
     cfg = dataclasses.replace(cfg, backend=args.backend)
+    if args.tile_rows is not None:
+        cfg = dataclasses.replace(
+            cfg, xbar=dataclasses.replace(cfg.xbar,
+                                          tile_rows=args.tile_rows))
     if args.stack_planes is not None:
         from repro.core.device import DeviceConfig
         cfg = dataclasses.replace(
@@ -154,7 +206,8 @@ def main(argv=None):
     elif args.qos:
         raise SystemExit("--qos only applies under --multiplex")
     sched = BatchScheduler(model, params, n_slots=args.slots,
-                           max_len=args.max_len, tenants=tenants)
+                           max_len=args.max_len, tenants=tenants,
+                           mode_policy=mode_policy)
     if model.executor is not None:
         ex = model.executor
         print(f"crossbar backend: {ex.n_resident} resident weight grids, "
@@ -164,8 +217,30 @@ def main(argv=None):
               f"programmed={ex.stats['programmed']}, "
               f"cache_hits={ex.stats['cache_hits']})")
         for t, entry in ex.residency().items():
+            m = entry["modes"]
             print(f"  resident tenant {t}: v{entry['version']} "
-                  f"fingerprint={entry['fingerprint']}")
+                  f"fingerprint={entry['fingerprint']} "
+                  f"modes={m['expansion']} expansion / "
+                  f"{m['deepnet']} deep-net")
+        if mode_policy is not None:
+            rep = sched.mode_report()
+            agg = rep["aggregate"]
+            print(f"mode policy: {agg['n_expansion']} expansion-fused / "
+                  f"{agg['n_deepnet']} deep-net weight grids; mean "
+                  f"worst-case IR-drop reduction on expansion layers "
+                  f"{agg['ir_drop_reduction_expansion'] * 100:.1f}% "
+                  f"(paper: 22%)")
+            for name, entry in list(rep["layers"].items())[:6]:
+                gain = (f"-{entry['ir_drop_reduction'] * 100:.1f}% IR drop"
+                        if entry["mode"] == "expansion" else
+                        f"-{entry['ir_drop_reduction'] * 100:.1f}% if fused")
+                print(f"  {name}: {entry['mode']:9s} "
+                      f"dev {entry['dev_deepnet']:.4f} -> "
+                      f"{entry['dev_expansion']:.4f} ({gain})  "
+                      f"[{entry['reason']}]")
+            if len(rep["layers"]) > 6:
+                print(f"  ... {len(rep['layers']) - 6} more weight grids "
+                      f"(sched.mode_report() for the full table)")
     key = jax.random.PRNGKey(1)
     for rid in range(args.requests):
         key, k = jax.random.split(key)

@@ -10,14 +10,12 @@ full configs on the production mesh (--mesh pod).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.configs import ALIASES, get_config
+from repro.configs import get_config
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.distributed import sharding as shd
 from repro.launch import ft

@@ -9,7 +9,7 @@ returns ``(params, specs)`` where specs mirror params with tuples of
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

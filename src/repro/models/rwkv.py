@@ -12,8 +12,6 @@ State per layer for decode: (last hidden token-shift states, GLA state).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
-
 import jax
 import jax.numpy as jnp
 

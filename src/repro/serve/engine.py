@@ -169,9 +169,11 @@ class BatchScheduler:
     """
 
     def __init__(self, model: Model, params, n_slots: int, max_len: int,
-                 tenants: Optional[Dict[str, Any]] = None):
+                 tenants: Optional[Dict[str, Any]] = None,
+                 mode_policy=None):
         self.model = model
         self.n_slots, self.max_len = n_slots, max_len
+        self.mode_policy = mode_policy
         tenant_params: Dict[str, Any] = {}
         self._weights: Dict[str, float] = {}
         for t, spec in (dict(tenants) if tenants else {"A": params}).items():
@@ -194,14 +196,24 @@ class BatchScheduler:
                 "multi-tenant multiplexing serves each checkpoint from "
                 "one plane of a stacked bank; it requires the "
                 "crossbar backend (ModelConfig(backend='crossbar'))")
+        if mode_policy is not None and executor is None:
+            raise RuntimeError(
+                "mode_policy selects per-weight crossbar read modes; it "
+                "requires the crossbar backend "
+                "(ModelConfig(backend='crossbar'))")
         if executor is not None:
             # crossbar backend: program each tenant's weights onto its
             # plane set ONCE at scheduler construction — the jitted decode
             # closures below trace against already-programmed tiles
-            # (program-at-load, read-at-inference)
+            # (program-at-load, read-at-inference).  mode_policy decides
+            # each weight's plane layout here, at program time; the
+            # decode closures then dispatch per weight with no extra
+            # traces (expansion-fused reads are leak-free constants,
+            # deep-net reads keep the traced leak operand)
             for t in sorted(tenant_params):
                 with executor.read_tenant(t):
-                    executor.ensure_programmed(tenant_params[t])
+                    executor.ensure_programmed(tenant_params[t],
+                                               mode_policy=mode_policy)
         self._slot_quota = _split_slots(n_slots, self._weights)
         self._lanes: Dict[str, _Lane] = {
             t: self._make_lane(t, p) for t, p in sorted(tenant_params.items())}
@@ -553,6 +565,16 @@ class BatchScheduler:
         if decoded and self._swap is not None:
             self._swap.note_decode_step()
         return finished
+
+    def mode_report(self, tenant: str = "A") -> Dict[str, Any]:
+        """Per-weight read-mode choices and their IR-drop economics for
+        a tenant's plane set (``CrossbarExecutor.mode_report``) — the
+        operator-facing view of what ``mode_policy`` decided."""
+        if self.model.executor is None:
+            raise RuntimeError(
+                "mode_report requires the crossbar backend "
+                "(ModelConfig(backend='crossbar'))")
+        return self.model.executor.mode_report(tenant=tenant)
 
     def qos_report(self) -> Dict[str, Dict[str, Any]]:
         """Per-tenant QoS accounting in ``swap_history`` style: the

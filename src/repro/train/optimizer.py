@@ -8,7 +8,7 @@ ZeRO when parameters are FSDP-sharded).  No optax dependency.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

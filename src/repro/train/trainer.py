@@ -12,8 +12,7 @@ the cast is fused into the gather by XLA.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

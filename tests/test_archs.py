@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.configs import ARCH_IDS, get_config, shape_applicable
 from repro.models.model import build_model
 
 B, S = 2, 16

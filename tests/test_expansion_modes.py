@@ -1,0 +1,269 @@
+"""Per-weight expansion-mode serving (PR 6): fused-pair bank semantics,
+mode-policy resolution, IR-drop-aware auto-selection, and the mixed-mode
+read path of the executor."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import engine as eng
+from repro.core import ir_drop, modes
+from repro.core.engine import EngineConfig
+from repro.core.executor import CrossbarExecutor
+from repro.core.modes import BankState, StackState
+from repro.core.quant import QuantConfig
+from repro.core.timing import PAPER
+
+
+def _stack_cfg(r=8, m=6):
+    return modes.StackConfig(rows_per_plane=r, n_cols=m)
+
+
+def _pair(key, r=8, m=6):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    g_top = jax.random.uniform(k1, (r, m), minval=1e-5, maxval=1e-4)
+    g_bot = jax.random.uniform(k2, (r, m), minval=1e-5, maxval=1e-4)
+    v_top = jax.random.uniform(k3, (r,), maxval=PAPER.v_read)
+    v_bot = jax.random.uniform(k4, (r,), maxval=PAPER.v_read)
+    return StackState(g_top, g_bot, jnp.bool_(True)), v_top, v_bot
+
+
+# -- fused-pair bank ops vs the N=2 StackState originals ----------------------
+
+def test_bank_expansion_mac_bit_exact_vs_stack_at_n2():
+    cfg = _stack_cfg()
+    pair, v_top, v_bot = _pair(jax.random.PRNGKey(0))
+    bank = modes.bank_from_pair(pair)
+    assert jnp.array_equal(
+        modes.bank_expansion_mac(bank, v_top, v_bot, cfg),
+        modes.expansion_mac(pair, v_top, v_bot, cfg))
+    # and through the exact nodal solve
+    assert jnp.array_equal(
+        modes.bank_expansion_mac_ir(bank, v_top, v_bot, cfg),
+        modes.expansion_mac_ir(pair, v_top, v_bot, cfg))
+
+
+def test_bank_fused_pair_selects_planes_in_tall_bank():
+    cfg = _stack_cfg()
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    g = jnp.stack([jax.random.uniform(k, (8, 6), minval=1e-5, maxval=1e-4)
+                   for k in ks[:4]])
+    v_top = jax.random.uniform(ks[4], (8,), maxval=PAPER.v_read)
+    v_bot = jax.random.uniform(ks[5], (8,), maxval=PAPER.v_read)
+    bank = BankState(g, jnp.int32(0))
+    # fusing planes (1, 3) of an N=4 bank reads exactly those two planes
+    pair = StackState(g[1], g[3], jnp.bool_(True))
+    got = modes.bank_expansion_mac(bank, v_top, v_bot, cfg,
+                                   idx_top=1, idx_bot=3)
+    assert jnp.array_equal(got, modes.expansion_mac(pair, v_top, v_bot, cfg))
+    # indices may be traced: a jitted closure rotates the fused pair
+    # without re-lowering
+    jitted = jax.jit(lambda b, it, ib: modes.bank_expansion_mac(
+        b, v_top, v_bot, cfg, idx_top=it, idx_bot=ib))
+    assert jnp.allclose(jitted(bank, jnp.int32(1), jnp.int32(3)), got,
+                        rtol=1e-6, atol=0.0)
+
+
+@pytest.mark.parametrize("r,m", [
+    (4, 4), (6, 5),
+    pytest.param(8, 8, marks=pytest.mark.slow),
+    pytest.param(10, 10, marks=pytest.mark.slow),
+    pytest.param(12, 6, marks=pytest.mark.slow),
+])
+def test_expansion_mac_ir_matches_nodal_solve(r, m):
+    """The mode ops' IR-aware MAC is literally the shared-column nodal
+    solve — across tile geometries, both at pair and bank scale."""
+    cfg = _stack_cfg(r, m)
+    pair, v_top, v_bot = _pair(jax.random.PRNGKey(r * m), r, m)
+    i_ref, _, _ = ir_drop.solve_crossstack(
+        pair.g_top, pair.g_bot, v_top, v_bot, cfg.params.r_wire)
+    assert jnp.array_equal(
+        modes.expansion_mac_ir(pair, v_top, v_bot, cfg), i_ref)
+    assert jnp.array_equal(
+        modes.bank_expansion_mac_ir(modes.bank_from_pair(pair),
+                                    v_top, v_bot, cfg), i_ref)
+    # sanity: at these conductances the ideal (zero-wire) MAC upper-bounds
+    # the solved currents, and the IR solve stays within 5% of it
+    i_ideal = modes.expansion_mac(pair, v_top, v_bot, cfg)
+    assert jnp.all(i_ref <= i_ideal + 1e-12)
+    assert jnp.all(1.0 - i_ref / i_ideal < 0.05)
+
+
+@pytest.mark.parametrize("r,m", [
+    (5, 4),
+    pytest.param(10, 10, marks=pytest.mark.slow),
+])
+def test_mode_ir_report_recomputes_from_raw_solves(r, m):
+    """mode_ir_report's scores are exactly the mean per-column
+    ir_drop_loss of the raw planar / crossstack solves at the all-SET,
+    full-drive worst case."""
+    rep = ir_drop.mode_ir_report(r, m)
+    assert (rep["tile_rows"], rep["tile_cols"]) == (r, m)  # under the cap
+    g_half = jnp.full((r, m), PAPER.g_set)
+    g_full = jnp.full((2 * r, m), PAPER.g_set)
+    v_half = jnp.full((r,), PAPER.v_read)
+    v_full = jnp.full((2 * r,), PAPER.v_read)
+    i_ideal = ir_drop.ideal_currents(
+        ir_drop._series(g_full, PAPER.r_on_transistor), v_full)
+    i_pl, _, _ = ir_drop.solve_planar(g_full, v_full, PAPER.r_wire)
+    i_cs, _, _ = ir_drop.solve_crossstack(g_half, g_half, v_half, v_half,
+                                          PAPER.r_wire)
+    dev_pl = float(ir_drop.ir_drop_loss(i_pl, i_ideal).mean())
+    dev_cs = float(ir_drop.ir_drop_loss(i_cs, i_ideal).mean())
+    assert rep["dev_deepnet"] == pytest.approx(dev_pl, rel=1e-6)
+    assert rep["dev_expansion"] == pytest.approx(dev_cs, rel=1e-6)
+    assert rep["ir_drop_reduction"] == pytest.approx(
+        1.0 - dev_cs / dev_pl, rel=1e-6)
+    # expansion's shorter shared column must win at every geometry
+    assert rep["dev_expansion"] < rep["dev_deepnet"]
+
+
+def test_capped_geometry_preserves_small_tiles_and_caps_large():
+    assert ir_drop.capped_geometry(10, 10) == (10, 10)
+    r, m = ir_drop.capped_geometry(128, 128)
+    assert 3 * r * m <= 1024
+    assert r >= 2 and m >= 2
+
+
+# -- executor: mode policy resolution and the mixed-mode read path ------------
+
+XBAR = EngineConfig(tile_rows=16, tile_cols=16, mode="deepnet",
+                    quant=QuantConfig(w_bits=4, in_bits=8, adc_bits=10))
+
+
+def _params(key=0, d=32, d_ff=48):
+    ks = iter(jax.random.split(jax.random.PRNGKey(key), 8))
+
+    def w(*shape):
+        return jax.random.normal(next(ks), shape) * 0.3
+
+    return {
+        "blocks": {"attn": {"wq": w(2, d, d)},
+                   "mlp": {"wi": w(2, d, d_ff), "wo": w(2, d_ff, d)}},
+        "head": w(d, 2 * d),
+    }
+
+
+def test_auto_policy_fuses_attention_and_head_keeps_mlp_deepnet():
+    ex = CrossbarExecutor(XBAR)
+    ex.program_params(_params(), mode_policy="auto")
+    assert ex.mode_for("blocks.0.attn.wq") == "expansion"
+    assert ex.mode_for("blocks.1.attn.wq") == "expansion"
+    assert ex.mode_for("head") == "expansion"
+    assert ex.mode_for("blocks.0.mlp.wi") == "deepnet"
+    assert ex.mode_for("blocks.1.mlp.wo") == "deepnet"
+    rep = ex.mode_report()
+    assert rep["aggregate"]["n_expansion"] == 3
+    assert rep["aggregate"]["n_deepnet"] == 4
+    for name, entry in rep["layers"].items():
+        assert entry["mode"] == ex.mode_for(name)
+        assert entry["fused"] == (entry["mode"] == "expansion")
+        assert entry["reason"].startswith("auto:")
+    res = ex.residency()["A"]["modes"]
+    assert res == {"expansion": 3, "deepnet": 4}
+
+
+def test_auto_policy_on_paper_geometry_meets_22pct_claim():
+    """The acceptance number: on the paper's 10x10x2 prototype geometry
+    the expansion layout cuts worst-case IR drop >= 20% (paper: 22%)."""
+    cfg10 = dataclasses.replace(XBAR, tile_rows=10, tile_cols=10)
+    ex = CrossbarExecutor(cfg10)
+    ex.program_params(_params(d=20, d_ff=60), mode_policy="auto")
+    agg = ex.mode_report()["aggregate"]
+    assert agg["n_expansion"] > 0 and agg["n_deepnet"] > 0
+    assert agg["ir_drop_reduction_expansion"] >= 0.20
+
+
+def test_named_and_fragment_mode_policy_resolution():
+    ex = CrossbarExecutor(XBAR)
+    ex.program_params(_params(), mode_policy={
+        "blocks.0.attn.wq": "expansion",   # exact name
+        "mlp.wi": "expansion",             # dotted fragment, both layers
+        "default": "deepnet",
+    })
+    assert ex.mode_for("blocks.0.attn.wq") == "expansion"
+    assert ex.mode_for("blocks.0.mlp.wi") == "expansion"
+    assert ex.mode_for("blocks.1.mlp.wi") == "expansion"
+    assert ex.mode_for("blocks.1.attn.wq") == "deepnet"  # default
+    assert ex.mode_for("head") == "deepnet"
+
+
+def test_odd_row_tile_count_refuses_expansion_under_auto():
+    # d=16 at tile_rows=16 -> a single row-tile: nothing to pair across
+    # the two planes, so auto falls back to deep-net even for attention
+    ex = CrossbarExecutor(XBAR)
+    ex.program_params({"blocks": {"attn": {"wq": jax.random.normal(
+        jax.random.PRNGKey(0), (2, 16, 16)) * 0.3}}}, mode_policy="auto")
+    assert ex.mode_for("blocks.0.attn.wq") == "deepnet"
+    reason = ex.mode_report()["layers"]["blocks.0.attn.wq"]["reason"]
+    assert "row-tile" in reason
+
+
+def test_fused_reads_bit_exact_vs_expansion_engine():
+    """A fused weight's executor read equals engine.matmul under the
+    expansion cfg; a deep-net weight's read is untouched — one executor,
+    both modes, no re-programming between reads."""
+    ex = CrossbarExecutor(XBAR)
+    p = _params()
+    ex.program_params(p, mode_policy="auto")
+    x = jax.random.normal(jax.random.PRNGKey(9), (3, 32))
+    exp_cfg = dataclasses.replace(XBAR, mode="expansion")
+    w_attn = p["blocks"]["attn"]["wq"][0]
+    y = ex.linear(x, w_attn, "blocks.0.attn.wq")
+    assert jnp.array_equal(
+        y, eng.matmul(x, eng.program(w_attn, exp_cfg), exp_cfg))
+    w_mlp = p["blocks"]["mlp"]["wi"][0]
+    y2 = ex.linear(x, w_mlp, "blocks.0.mlp.wi")
+    assert jnp.array_equal(
+        y2, eng.matmul(x, eng.program(w_mlp, XBAR), XBAR))
+
+
+def test_mode_is_physical_layout_conflict_on_reprogram():
+    ex = CrossbarExecutor(XBAR)
+    p = _params()
+    ex.program_params(p, mode_policy="auto")
+    # a policy-free re-walk expresses no preference: pure cache hit
+    ex.program_params(p)
+    # demanding the opposite layout for a resident weight must refuse —
+    # mode is how the planes were physically programmed
+    with pytest.raises(RuntimeError, match="physical plane layout"):
+        ex.program_params(p, mode_policy={"default": "auto",
+                                          "blocks.0.attn.wq": "deepnet"})
+
+
+def test_fused_residency_consumes_both_planes():
+    # stack_planes=2: one expansion-fused weight fills the whole bank,
+    # so a second tenant cannot join on those grids
+    ex = CrossbarExecutor(XBAR)
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 16)) * 0.3
+    ex.program_params({"head": w}, mode_policy="expansion")
+    with pytest.raises(RuntimeError, match="stack is full"):
+        ex.program_params({"head": w}, tenant="B")
+    # deep-net layout leaves the second plane free for tenant B
+    ex2 = CrossbarExecutor(XBAR)
+    ex2.program_params({"head": w}, mode_policy="deepnet")
+    ex2.program_params({"head": w}, tenant="B")
+    assert ex2.tenants == ["A", "B"]
+
+
+def test_fused_anchor_refuses_hot_swap():
+    ex = CrossbarExecutor(XBAR)
+    p = _params()
+    ex.program_params(p, mode_policy="auto")
+    with pytest.raises(RuntimeError, match="expansion-fused"):
+        ex.begin_swap(p)
+    # an all-deep-net tenant still swaps
+    ex2 = CrossbarExecutor(XBAR)
+    ex2.program_params(p, mode_policy="deepnet")
+    plan = ex2.begin_swap(p)
+    assert plan is not None
+
+
+def test_invalid_policy_values_refused():
+    ex = CrossbarExecutor(XBAR)
+    with pytest.raises(ValueError, match="mode"):
+        ex.program_params(_params(), mode_policy="sideways")
+    with pytest.raises(ValueError, match="mode"):
+        ex.program_params(_params(),
+                          mode_policy={"default": "sideways"})

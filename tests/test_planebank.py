@@ -8,8 +8,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import crossbar, engine as eng, modes
-from repro.core.crossbar import PlaneConfig
+from repro.core import engine as eng, modes
 from repro.core.device import DeviceConfig
 from repro.core.engine import EngineConfig
 from repro.core.executor import CrossbarExecutor
@@ -127,7 +126,8 @@ def test_residency_registry_reports_fingerprint_and_version():
     reg = ex.residency()
     assert sorted(reg) == ["A", "B"]
     assert reg["A"] == {"fingerprint": ex.fingerprint(tenant="A"),
-                        "version": 1}
+                        "version": 1,
+                        "modes": {"expansion": 0, "deepnet": 1}}
     assert reg["B"]["fingerprint"] == _cold(w_b).fingerprint()
     ex.swap({"head": w_b + 0.1}, tenant="B")
     assert ex.residency()["B"]["version"] == 2

@@ -1,7 +1,6 @@
 """Hypothesis property-based tests on the system's invariants."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 # hypothesis ships in the [test] extra (pip install -e .[test]); skip the
@@ -13,7 +12,7 @@ from repro.core import engine as eng
 from repro.core import pipeline as pipe
 from repro.core import quant
 from repro.core.quant import QuantConfig
-from repro.core.timing import CrossStackParams, PAPER
+from repro.core.timing import CrossStackParams
 from repro.models.lin_attn import chunked_gla, naive_gla
 
 SET = settings(max_examples=20, deadline=None)
