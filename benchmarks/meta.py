@@ -67,8 +67,15 @@ def write_stamped(results: Dict[str, Any], path: str,
 
 
 def append_trajectory(meta: Dict[str, Any],
-                      results: Dict[str, Any]) -> None:
-    """Append {meta, us_per_call summary} to benchmarks/trajectory.json."""
+                      results: Dict[str, Any],
+                      telemetry: Optional[Dict[str, Any]] = None) -> None:
+    """Append {meta, us_per_call summary} to benchmarks/trajectory.json.
+
+    ``telemetry`` (optional) is a flat dict of run-level counters —
+    kernel/reference dispatch counts, jit trace/retrace totals — so
+    trajectory entries carry the registry's invariants alongside
+    timings (see benchmarks/run.py).
+    """
     try:
         with open(TRAJECTORY) as f:
             traj = json.load(f)
@@ -79,7 +86,10 @@ def append_trajectory(meta: Dict[str, Any],
     summary = {name: res.get("us_per_call")
                for name, res in results.items()
                if isinstance(res, dict) and not name.startswith("_")}
-    traj.append({"meta": meta, "us_per_call": summary})
+    entry: Dict[str, Any] = {"meta": meta, "us_per_call": summary}
+    if telemetry:
+        entry["telemetry"] = telemetry
+    traj.append(entry)
     with open(TRAJECTORY, "w") as f:
         json.dump(traj, f, indent=2, default=float)
 

@@ -1,0 +1,288 @@
+"""Telemetry smoke: the observability layer under a real multiplexed
+serving run, gated in the exit code (the CI "Telemetry smoke" step).
+
+One A/B multiplexed run with a mid-stream tenant-B hot-swap must
+produce, with ``telemetry=True``:
+
+  * a **parseable Prometheus snapshot** — both the scheduler registry
+    and the process-global registry round-trip through
+    ``obs.parse_prometheus`` with a non-trivial sample count;
+  * a **complete span set per completed request** on both tenants —
+    ``queue_wait`` + ``prefill`` + ``decode`` spans that telescope
+    exactly to the ``request`` span's wall time;
+  * a **zero retrace delta** across the swap window
+    (``serve_jit_retraces_total`` — the runtime form of the "no
+    re-trace at swap-window boundaries" invariant);
+  * **device counters consistent with the Table-I model** — the
+    per-tenant per-mode ``serve_device_read_seconds_total`` /
+    ``serve_device_energy_joules_total`` totals must equal
+    ``CrossbarExecutor.device_token_cost`` x tokens served (rel 1e-6).
+
+A second phase measures decode throughput with telemetry on vs off
+(fresh schedulers, identical workload, warmed-up closures, best of
+several repeats each) and gates the overhead at <= 5 %.
+
+CLI: ``python benchmarks/obs_bench.py --json BENCH_obs.json`` (exits
+nonzero if any acceptance figure fails).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import obs  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.core.engine import EngineConfig  # noqa: E402
+from repro.core.quant import QuantConfig  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.serve.engine import BatchScheduler, Request  # noqa: E402
+from repro.serve.hotswap import finetune_delta  # noqa: E402
+
+# the paper's operating point, matching multiplex_bench.py so the
+# telemetry smoke watches the same serving stack the other smokes gate
+_XBAR = EngineConfig(tile_rows=64, tile_cols=128, mode="deepnet",
+                     quant=QuantConfig(w_bits=4, in_bits=10, adc_bits=10))
+
+_N_SLOTS, _MAX_LEN = 2, 64
+_SPAN_SET = ("queue_wait", "prefill", "decode", "request")
+_DEVICE_REL_TOL = 1e-6
+_OVERHEAD_GATE = 0.05
+
+
+def _crossbar_cfg():
+    return dataclasses.replace(get_config("qwen3_4b", smoke=True),
+                               backend="crossbar", xbar=_XBAR)
+
+
+def _prompt(rid, vocab):
+    return jax.random.randint(jax.random.PRNGKey(rid), (6,), 0,
+                              vocab - 1).astype(jnp.int32)
+
+
+def _submit(sched, model_id, rids, vocab, max_new):
+    for rid in rids:
+        sched.submit(Request(rid=rid, prompt=_prompt(rid, vocab),
+                             max_new=max_new, model_id=model_id))
+
+
+def _drain(sched, n_req, max_steps=500):
+    done, steps = [], 0
+    while len(done) < n_req and steps < max_steps:
+        done += sched.step()
+        steps += 1
+    return {r.rid: r for r in done}
+
+
+def _span_gates(sched, done, rids_by_tenant):
+    """Every completed request has its full span set and the
+    queue_wait + prefill + decode decomposition telescopes to the
+    request span's wall time."""
+    complete, telescoped = True, True
+    for tenant, rids in rids_by_tenant.items():
+        for rid in rids:
+            if rid not in done:
+                complete = False
+                continue
+            parts = {}
+            for name in _SPAN_SET:
+                got = sched.tracer.spans(name, rid=rid, tenant=tenant)
+                if len(got) != 1:
+                    complete = False
+                    break
+                parts[name] = got[0]
+            else:
+                decomp = sum(parts[n].duration
+                             for n in ("queue_wait", "prefill", "decode"))
+                if abs(decomp - parts["request"].duration) > 1e-9:
+                    telescoped = False
+    return complete, telescoped
+
+
+def _device_gates(sched, executor):
+    """Per-tenant per-mode device counters vs device_token_cost x
+    tokens served; returns (ok, worst_rel_err, per-tenant figures)."""
+    ok, worst, figures = True, 0.0, {}
+    for tenant in sched.tenants:
+        tokens = sched.metrics.total("serve_tokens_total", tenant=tenant)
+        cost = executor.device_token_cost(tenant)
+        figures[tenant] = {"tokens": int(tokens), "modes": {}}
+        for mode, c in sorted(cost.items()):
+            checks = {
+                "read_s": ("serve_device_read_seconds_total",
+                           c["read_s"] * tokens),
+                "energy_j": ("serve_device_energy_joules_total",
+                             c["energy_j"] * tokens),
+            }
+            fig = {}
+            for key, (metric, want) in checks.items():
+                got = sched.metrics.total(metric, tenant=tenant,
+                                          mode=mode)
+                rel = (abs(got - want) / want) if want else abs(got)
+                worst = max(worst, rel)
+                ok = ok and rel <= _DEVICE_REL_TOL
+                fig[key] = got
+            fig["pj_per_token"] = (fig["energy_j"] / tokens * 1e12
+                                   if tokens else 0.0)
+            figures[tenant]["modes"][mode] = fig
+    return ok, worst, figures
+
+
+def _decode_throughput(cfg, params, steps, repeats):
+    """Steady-state decode throughput (tokens/s) with telemetry on vs
+    off: two fresh single-tenant schedulers, closures pre-warmed so jit
+    compile never lands in a timed window, timed windows *interleaved*
+    between the arms (so machine drift hits both equally, instead of
+    masquerading as overhead), best-of-``repeats`` per arm."""
+    scheds = {}
+    for arm in ("off", "on"):
+        model = build_model(cfg)
+        sched = BatchScheduler(model, params, _N_SLOTS, _MAX_LEN,
+                               telemetry=(arm == "on"))
+        # keep every slot busy for the whole measurement
+        budget = (repeats + 2) * steps + 8
+        _submit(sched, "A", range(_N_SLOTS), cfg.vocab, budget)
+        for _ in range(3):      # admission + decode compile, then warm
+            sched.step()
+        scheds[arm] = sched
+    best = {"off": 0.0, "on": 0.0}
+    for _ in range(repeats):
+        for arm, sched in scheds.items():
+            lane = sched._lanes["A"]
+            tok0 = lane.tokens_served
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                sched.step()
+            jax.block_until_ready(lane.tokens)
+            dt = time.perf_counter() - t0
+            best[arm] = max(best[arm],
+                            (lane.tokens_served - tok0) / dt)
+    return best["off"], best["on"]
+
+
+def bench_obs(quick: bool = False):
+    n_req, max_new = (2, 5) if quick else (3, 8)
+    steps, repeats = (30, 4) if quick else (50, 5)
+    cfg = _crossbar_cfg()
+    params_a = build_model(cfg).init(jax.random.PRNGKey(0))
+    params_b = finetune_delta(params_a, scale=0.04, seed=11)
+    params_b2 = finetune_delta(params_a, scale=0.07, seed=23)
+    rids = {"A": list(range(n_req)),
+            "B": list(range(100, 100 + n_req))}
+
+    # -- phase 1: multiplexed A/B with a mid-stream B hot-swap -------------
+    reg = obs.registry()
+    retraces_at_start = reg.total("serve_jit_retraces_total")
+    t0 = time.perf_counter()
+    model = build_model(cfg)
+    sched = BatchScheduler(model, params_a, _N_SLOTS, _MAX_LEN,
+                           tenants={"A": params_a, "B": params_b},
+                           telemetry=True)
+    _submit(sched, "A", rids["A"], cfg.vocab, 2 * max_new)
+    _submit(sched, "B", rids["B"], cfg.vocab, 2 * max_new)
+    for _ in range(2):
+        sched.step()
+    retraces_pre_swap = reg.total("serve_jit_retraces_total")
+    hs = sched.begin_hot_swap(params_b2, chunks_per_step=1, tenant="B")
+    # pace the write window across several of the surviving decode steps
+    hs.chunks_per_step = max(
+        1, -(-hs.plan.total_chunks // max(2 * max_new - 4, 1)))
+    done = _drain(sched, 2 * n_req)
+    while sched.swap_in_flight:         # pace out any tail chunks
+        sched.step()
+    wall = time.perf_counter() - t0
+    retraces_after = reg.total("serve_jit_retraces_total")
+
+    spans_complete, spans_telescope = _span_gates(sched, done, rids)
+    device_ok, device_rel, device_fig = _device_gates(
+        sched, model.executor)
+    swap_rep = sched.swap_history[0]
+
+    # both exports must round-trip the text exposition parser
+    try:
+        samples = (len(obs.parse_prometheus(sched.metrics.to_prometheus()))
+                   + len(obs.parse_prometheus(reg.to_prometheus())))
+        prom_ok = samples > 0
+    except ValueError:
+        samples, prom_ok = 0, False
+
+    # -- phase 2: decode-throughput overhead, telemetry on vs off ----------
+    thr_off, thr_on = _decode_throughput(cfg, params_a, steps, repeats)
+    overhead = 1.0 - thr_on / thr_off
+
+    return {
+        "us_per_call": wall * 1e6,
+        "n_requests_per_tenant": n_req,
+        "requests_completed": len(done),
+        "swap_lifecycle": swap_rep["swap_mode"],
+        "swap_decode_steps_during": swap_rep["decode_steps_during_swap"],
+        "prometheus_parseable": bool(prom_ok),
+        "prometheus_samples": samples,
+        "spans_complete_per_request": bool(spans_complete),
+        "spans_telescope_to_request_wall": bool(spans_telescope),
+        "jit_retraces_across_swap_window": retraces_after
+        - retraces_pre_swap,
+        "jit_retraces_whole_run": retraces_after - retraces_at_start,
+        "device_counters_match_timing_model": bool(device_ok),
+        "device_counter_worst_rel_err": device_rel,
+        "device_accounting": device_fig,
+        "decode_tok_per_s_telemetry_off": thr_off,
+        "decode_tok_per_s_telemetry_on": thr_on,
+        "telemetry_overhead_frac": overhead,
+        "telemetry_overhead_gate": _OVERHEAD_GATE,
+    }
+
+
+def accepted(res) -> bool:
+    return (res["prometheus_parseable"]
+            and res["spans_complete_per_request"]
+            and res["spans_telescope_to_request_wall"]
+            and res["jit_retraces_across_swap_window"] == 0
+            and res["device_counters_match_timing_model"]
+            and res["swap_decode_steps_during"] > 0
+            and res["telemetry_overhead_frac"] <= res[
+                "telemetry_overhead_gate"])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_obs.json")
+    args = ap.parse_args(argv)
+    res = bench_obs(quick=True)
+    print("name,us_per_call,derived")
+    derived = {k: v for k, v in res.items() if k != "us_per_call"}
+    print(f"obs_telemetry,{res['us_per_call']:.1f},"
+          f"{json.dumps(derived, default=float)}")
+    from benchmarks.meta import append_trajectory, write_stamped
+    results = {"obs_telemetry": res}
+    meta = write_stamped(results, args.json, lane="obs-smoke")
+    append_trajectory(meta, results)
+    print(f"# wrote {args.json} (sha={meta['git_sha'][:12]})")
+    ok = accepted(res)
+    print(f"# acceptance: prometheus parseable "
+          f"({res['prometheus_samples']} samples: "
+          f"{res['prometheus_parseable']}), span sets complete "
+          f"({res['spans_complete_per_request']}) and telescoping "
+          f"({res['spans_telescope_to_request_wall']}), retraces across "
+          f"swap window {res['jit_retraces_across_swap_window']} "
+          f"(whole run {res['jit_retraces_whole_run']}), device "
+          f"counters match Table-I model "
+          f"({res['device_counters_match_timing_model']}, worst rel "
+          f"{res['device_counter_worst_rel_err']:.2e}), telemetry "
+          f"overhead {res['telemetry_overhead_frac'] * 100:+.1f}% "
+          f"(gate <= {res['telemetry_overhead_gate'] * 100:.0f}%)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

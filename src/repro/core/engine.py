@@ -24,11 +24,13 @@ Two execution paths share one ``ProgrammedLinear`` representation:
 from __future__ import annotations
 
 import dataclasses
+from collections.abc import Mapping
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import quant
 from repro.core.device import DeviceConfig
 from repro.core.quant import QuantConfig
@@ -132,11 +134,57 @@ def _adc_codes(acc: jax.Array, cfg: EngineConfig) -> jax.Array:
     return code * lsb
 
 
-# host-side dispatch counters (bumped per call, i.e. per trace under jit).
-# Benches and the overlap property test snapshot these around a decode
-# closure's trace to prove the hot path lowered the Pallas kernel and not
-# the reference scan.
-path_calls = {"kernel": 0, "reference": 0}
+# host-side dispatch accounting (bumped per call, i.e. per trace under
+# jit): every matmul dispatch lands in the global telemetry registry as
+# crossstack_dispatch_total{path, geometry}.  Benches and the overlap
+# property test snapshot these around a decode closure's trace to prove
+# the hot path lowered the Pallas kernel and not the reference scan.
+_DISPATCH = "crossstack_dispatch_total"
+
+
+def _count_dispatch(path: str, pw: "ProgrammedLinear") -> None:
+    obs.registry().counter(
+        _DISPATCH,
+        help="engine.matmul dispatches per execution path, bumped per "
+             "call (= per trace under jit), labeled by KxN geometry",
+    ).inc(path=path, geometry=f"{pw.k}x{pw.n}")
+
+
+class _PathCallsView(Mapping):
+    """Deprecated read-only alias for the registry's dispatch counters.
+
+    Kept so pre-registry callers (``eng.path_calls["kernel"]``,
+    ``dict(eng.path_calls)``, equality against plain dicts) keep
+    working; new code should query
+    ``obs.registry().total("crossstack_dispatch_total", path=...)``,
+    which also exposes the per-geometry split this view sums away.
+    """
+
+    _PATHS = ("kernel", "reference")
+
+    def __getitem__(self, key: str) -> int:
+        if key not in self._PATHS:
+            raise KeyError(key)
+        return int(obs.registry().total(_DISPATCH, path=key))
+
+    def __iter__(self):
+        return iter(self._PATHS)
+
+    def __len__(self) -> int:
+        return len(self._PATHS)
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, (Mapping, dict)):
+            return dict(self) == dict(other)
+        return NotImplemented
+
+    __hash__ = None
+
+    def __repr__(self) -> str:
+        return f"path_calls({dict(self)})"
+
+
+path_calls = _PathCallsView()
 
 
 def matmul(x: jax.Array, pw: ProgrammedLinear, cfg: EngineConfig,
@@ -152,7 +200,7 @@ def matmul(x: jax.Array, pw: ProgrammedLinear, cfg: EngineConfig,
     """
     if cfg.use_kernel:
         from repro.kernels.crossbar_mac import ops as cb_ops
-        path_calls["kernel"] += 1
+        _count_dispatch("kernel", pw)
         return cb_ops.crossbar_matmul(x, pw, cfg, leak_codes=leak_codes)
     return matmul_reference(x, pw, cfg, leak_codes=leak_codes)
 
@@ -173,7 +221,7 @@ def matmul_reference(x: jax.Array, pw: ProgrammedLinear, cfg: EngineConfig,
     each ADC conversion (modes.deepnet_read at executor scale): the term
     is common-mode and survives only through ADC quantization.
     """
-    path_calls["reference"] += 1
+    _count_dispatch("reference", pw)
     q = cfg.quant
     lead = x.shape[:-1]
     xb = x.reshape(-1, x.shape[-1])                     # (B, K)

@@ -59,12 +59,14 @@ import contextlib
 import dataclasses
 import hashlib
 import math
+import time
 from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import engine, ir_drop, planes
+from repro import obs
+from repro.core import engine, ir_drop, planes, timing
 from repro.core.engine import EngineConfig
 from repro.core.planes import ChunkedProgram, PlaneBank, SwapPlan
 
@@ -149,6 +151,15 @@ class CrossbarExecutor:
         self._ir_scores: Dict[Tuple[int, int], Dict[str, Any]] = {}
         self.stats = {"programmed": 0, "cache_hits": 0, "program_walks": 0,
                       "swaps": 0, "swap_chunks": 0}
+        # wall-clock start of the in-flight swap window, for the
+        # executor_swap span recorded at promote()/abort_swap()
+        self._swap_t0: Optional[float] = None
+
+    def _event(self, stat: str, metric: str, help: str, n: int = 1,
+               **labels: Any) -> None:
+        """Bump a legacy ``stats`` entry and its registry counter."""
+        self.stats[stat] += n
+        obs.registry().counter(metric, help=help).inc(n, **labels)
 
     # -- tenant addressing ----------------------------------------------------
 
@@ -413,6 +424,43 @@ class CrossbarExecutor:
         }
         return {"layers": layers, "aggregate": agg}
 
+    def device_token_cost(self, tenant: Optional[str] = None,
+                          ) -> Dict[str, Dict[str, float]]:
+        """Modeled device cost of ONE full-model read (one token) for a
+        tenant, split by read mode — the constants the serving tier's
+        per-token device-time/energy counters accumulate.
+
+        Per resident weight (Table-I accounting, ``core/timing.py``):
+
+        * read time: one bit-serial MAC, ``read_time(in_bits)`` — row
+          tiles of one slice read concurrently in the device, so depth
+          does not multiply time (mode only changes ADC grouping, not
+          pulse count);
+        * energy: ``in_bits * S * T`` (pulse, slice, row-tile) analog
+          column reads, each a worst-case ``mac_energy(R, N_pad)``,
+          doubled for the differential pos/neg planes.
+
+        Returns ``{mode: {"grids", "read_s", "energy_j"}}`` with only
+        the modes the tenant actually has weights programmed in.
+        """
+        tenant = self._resolve_tenant(tenant)
+        q, p = self.cfg.quant, self.cfg.params
+        out: Dict[str, Dict[str, float]] = {}
+        for name in sorted(self._cache):
+            bank = self._cache[name]
+            if not bank.has_tenant(tenant):
+                continue
+            pw = bank.active_for(tenant)
+            s, t, r, n_pad = (int(d) for d in pw.pos.shape)
+            mode = bank.mode_for(tenant)
+            entry = out.setdefault(
+                mode, {"grids": 0.0, "read_s": 0.0, "energy_j": 0.0})
+            entry["grids"] += 1
+            entry["read_s"] += timing.read_time(q.in_bits, p)
+            entry["energy_j"] += (q.in_bits * s * t * 2
+                                  * timing.mac_energy(r, n_pad, p=p))
+        return out
+
     # -- programming (the write path; once per deployment) -----------------
 
     @staticmethod
@@ -469,7 +517,8 @@ class CrossbarExecutor:
                 f"state — use swap(params, tenant={tenant!r}) / "
                 f"begin_swap(params, tenant={tenant!r}) for a "
                 f"zero-downtime reprogram")
-        self.stats["program_walks"] += 1
+        self._event("program_walks", "crossstack_program_walks_total",
+                    "program_params pytree walks", tenant=tenant)
         new = 0
         for name, w, n_in in self._eligible(leaves):
             if mode_policy is None:
@@ -522,7 +571,9 @@ class CrossbarExecutor:
                     f"{have} layout but the policy asks for {mode}; mode "
                     f"is physical plane layout — evict_tenant() and "
                     f"re-program to change it")
-            self.stats["cache_hits"] += 1
+            self._event("cache_hits", "crossstack_program_cache_hits_total",
+                        "re-walks that found the weight already resident",
+                        tenant=tenant)
             return 0
         k = math.prod(w.shape[:n_in])
         w2d = jnp.asarray(w, jnp.float32).reshape(k, -1)
@@ -549,7 +600,9 @@ class CrossbarExecutor:
         else:
             bank.assign(tenant, pw, fp)
         self._mode_reasons[(tenant, name)] = reason
-        self.stats["programmed"] += 1
+        self._event("programmed", "crossstack_programmed_weights_total",
+                    "weights programmed onto resident planes",
+                    tenant=tenant, mode=mode)
         return 1
 
     def _same_tree(self, leaves: Tuple[Any, ...], tenant: str) -> bool:
@@ -799,6 +852,7 @@ class CrossbarExecutor:
                 bank.reserve_staging()
         self._swap = SwapPlan(programs, tuple(w for _, w in leaves), params,
                               tenant=tenant, in_place=in_place)
+        self._swap_t0 = time.perf_counter()
         return self._swap
 
     def write_chunks(self, n: int = 1) -> int:
@@ -811,7 +865,9 @@ class CrossbarExecutor:
             if self._swap.done:
                 break
             finished = self._swap.write_chunk()
-            self.stats["swap_chunks"] += 1
+            self._event("swap_chunks", "crossstack_swap_chunks_total",
+                        "write-latency-costed chunks programmed into "
+                        "swap targets", tenant=self._swap.tenant)
             if finished is not None:
                 staged = finished.finish()
                 # write-verify against an independent one-shot programming
@@ -857,8 +913,18 @@ class CrossbarExecutor:
                 bank.land_staged(plan.tenant, pw, fp)
         self._programmed_leaves[plan.tenant] = plan.leaves
         self._versions[plan.tenant] = self._versions.get(plan.tenant, 0) + 1
-        self.stats["swaps"] += 1
+        lifecycle = "in_place" if plan.in_place else "staged"
+        self._event("swaps", "crossstack_swaps_total",
+                    "promoted plane-set swaps, by lifecycle",
+                    tenant=plan.tenant, lifecycle=lifecycle)
+        if self._swap_t0 is not None:
+            obs.tracer().record(
+                "executor_swap", self._swap_t0, time.perf_counter(),
+                tenant=plan.tenant, lifecycle=lifecycle,
+                chunks=plan.total_chunks,
+                device_write_s=plan.device_write_time())
         self._swap = None
+        self._swap_t0 = None
         return plan.params
 
     def abort_swap(self) -> None:
@@ -866,10 +932,16 @@ class CrossbarExecutor:
         serving (written-and-verified planes are buffered in the plan and
         never touch a bank before promote, so abort is pure discard —
         a staged plan's reserved slots simply revert to free)."""
-        if self._swap is not None and not self._swap.in_place:
-            for bank in self._cache.values():
-                bank.release_staging()
+        if self._swap is not None:
+            obs.registry().counter(
+                "crossstack_swap_aborts_total",
+                help="in-flight swaps discarded before promote").inc(
+                    tenant=self._swap.tenant)
+            if not self._swap.in_place:
+                for bank in self._cache.values():
+                    bank.release_staging()
         self._swap = None
+        self._swap_t0 = None
 
     def swap(self, params: Any, chunk_burst: int = 64,
              tenant: str = "A") -> Dict[str, Any]:
@@ -886,6 +958,7 @@ class CrossbarExecutor:
         return {"n_tiles": len(plan.programs),
                 "n_chunks": plan.total_chunks,
                 "tenant": tenant,
+                "swap_mode": "in_place" if plan.in_place else "staged",
                 "device_write_s": plan.device_write_time(),
                 "programmed_version": self.version(tenant)}
 

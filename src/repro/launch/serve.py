@@ -47,6 +47,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs import get_config
 from repro.models.model import build_model
 from repro.serve.engine import BatchScheduler, Request
@@ -149,7 +150,21 @@ def main(argv=None):
                          "(default: half)")
     ap.add_argument("--swap-chunks", type=int, default=8,
                     help="shadow-plane chunks programmed per decode step")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE.jsonl",
+                    help="write the telemetry trace at exit: one JSON "
+                         "object per line — request/swap spans, then "
+                         "every metric sample (docs/OBSERVABILITY.md)")
+    ap.add_argument("--metrics-interval", type=int, default=0,
+                    metavar="N",
+                    help="print a one-line stats banner every N decode "
+                         "steps (0 = off)")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="disable scheduler metrics/span collection "
+                         "(the overhead-baseline configuration)")
     args = ap.parse_args(argv)
+    if args.no_telemetry and (args.metrics_out or args.metrics_interval):
+        raise SystemExit("--no-telemetry contradicts --metrics-out / "
+                         "--metrics-interval")
     if args.hot_swap and args.backend != "crossbar":
         raise SystemExit("--hot-swap requires --backend crossbar")
     if args.multiplex and args.backend != "crossbar":
@@ -207,7 +222,8 @@ def main(argv=None):
         raise SystemExit("--qos only applies under --multiplex")
     sched = BatchScheduler(model, params, n_slots=args.slots,
                            max_len=args.max_len, tenants=tenants,
-                           mode_policy=mode_policy)
+                           mode_policy=mode_policy,
+                           telemetry=not args.no_telemetry)
     if model.executor is not None:
         ex = model.executor
         print(f"crossbar backend: {ex.n_resident} resident weight grids, "
@@ -257,6 +273,21 @@ def main(argv=None):
     swap_params = (resolve_swap_params(args.hot_swap, model, params)
                    if args.hot_swap else None)
 
+    def stats_banner(steps):
+        if not args.metrics_interval or steps % args.metrics_interval:
+            return
+        reg = sched.metrics
+        toks = int(reg.total("serve_tokens_total"))
+        parts = []
+        for t in sched.tenants:
+            n = int(reg.total("serve_tokens_total", tenant=t))
+            e = reg.total("serve_device_energy_joules_total", tenant=t)
+            pj = e / n * 1e12 if n else 0.0
+            parts.append(f"{t}:{n}tok/{pj:.0f}pJ")
+        retr = int(obs.registry().total("serve_jit_retraces_total"))
+        print(f"[obs] step {steps}: {toks} tokens "
+              f"({', '.join(parts)}); jit retraces {retr}")
+
     t0 = time.time()
     done, steps = [], 0
     while len(done) < args.requests and steps < 10_000:
@@ -270,6 +301,7 @@ def main(argv=None):
                   f"requests ({steps} decode steps)")
         done += sched.step()
         steps += 1
+        stats_banner(steps)
     # requests can drain before the chunked swap completes — finish the
     # deployment rather than abandoning a half-written shadow plane
     # (idle steps still program chunks and promote at the boundary)
@@ -279,6 +311,7 @@ def main(argv=None):
         while sched.swap_in_flight and steps < 20_000:
             sched.step()
             steps += 1
+            stats_banner(steps)
     dt = time.time() - t0
     total_tokens = sum(len(r.out) for r in done)
     print(f"served {len(done)} requests, {total_tokens} tokens in "
@@ -314,6 +347,35 @@ def main(argv=None):
               f"steady-state overlap "
               f"{rep['overlap_frac_steady_state'] * 100:.1f}% at "
               f"{rep['in_bits']}-bit reads (paper: ~29% at 10-bit)")
+    if model.executor is not None and sched.metrics.enabled:
+        # live traffic-weighted device figures (Table-I accounting per
+        # emitted token; see sched.mode_report()["traffic"])
+        for t in sched.tenants:
+            n = int(sched.metrics.total("serve_tokens_total", tenant=t))
+            if not n:
+                continue
+            for mode in ("expansion", "deepnet"):
+                e = sched.metrics.total(
+                    "serve_device_energy_joules_total",
+                    tenant=t, mode=mode)
+                s = sched.metrics.total(
+                    "serve_device_read_seconds_total",
+                    tenant=t, mode=mode)
+                if e:
+                    print(f"  device [{t}/{mode}]: {s * 1e6:.1f}us read, "
+                          f"{e / n * 1e12:.0f} pJ/token over {n} tokens")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(sched.tracer.to_jsonl())
+            f.write(sched.metrics.to_jsonl())
+            f.write(obs.tracer().to_jsonl())
+            f.write(obs.registry().to_jsonl())
+        n_spans = len(sched.tracer) + len(obs.tracer())
+        print(f"telemetry: wrote {n_spans} spans + metric samples to "
+              f"{args.metrics_out}")
+        print("# --- Prometheus snapshot (scheduler + global) ---")
+        print(sched.metrics.to_prometheus(), end="")
+        print(obs.registry().to_prometheus(), end="")
     return done
 
 

@@ -14,6 +14,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.models.model import Model
 from repro.serve.hotswap import HotSwapper, overlap_report
 
@@ -75,6 +76,15 @@ class Request:
     model_id: str = "A"        # tenant whose checkpoint serves this request
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # lifecycle timestamps (scheduler tracer clock), filled in by the
+    # scheduler when telemetry is on; the span set recorded at completion
+    # telescopes exactly: queue_wait [t_submit, t_admit] + prefill
+    # [t_admit, t_first] + decode [t_first, t_done] = request wall time
+    bucket: Optional[int] = None
+    t_submit: Optional[float] = None
+    t_admit: Optional[float] = None
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
 
 
 def _prompt_bucket(m: int, max_len: int) -> int:
@@ -107,6 +117,10 @@ class _Lane:
     # its reads pause — admissions hold, in-flight slots freeze — and
     # resume on the promoted weights at the swap boundary
     paused: bool = False
+    # modeled per-token device read cost by mode, cached from
+    # CrossbarExecutor.device_token_cost at lane build/promotion — the
+    # constants the per-token device-time/energy counters accumulate
+    device_cost: Optional[Dict[str, Dict[str, float]]] = None
 
 
 def _split_slots(n_slots: int, weights: Dict[str, float]) -> Dict[str, int]:
@@ -170,10 +184,19 @@ class BatchScheduler:
 
     def __init__(self, model: Model, params, n_slots: int, max_len: int,
                  tenants: Optional[Dict[str, Any]] = None,
-                 mode_policy=None):
+                 mode_policy=None, telemetry: bool = True):
         self.model = model
         self.n_slots, self.max_len = n_slots, max_len
         self.mode_policy = mode_policy
+        # per-scheduler telemetry: request lifecycle, token latency, QoS
+        # shares, modeled device time/energy.  Scoped per instance so
+        # concurrent schedulers never cross-contaminate and
+        # telemetry=False is a clean metrics-off baseline (the CI
+        # overhead gate).  Process-wide signals (engine dispatch, jit
+        # trace/retrace counters) live in obs.registry() instead.
+        self.telemetry = telemetry
+        self.metrics = obs.MetricsRegistry(enabled=telemetry)
+        self.tracer = obs.Tracer(enabled=telemetry)
         tenant_params: Dict[str, Any] = {}
         self._weights: Dict[str, float] = {}
         for t, spec in (dict(tenants) if tenants else {"A": params}).items():
@@ -221,19 +244,89 @@ class BatchScheduler:
         # padded token shape, i.e. one trace per prompt-length bucket
         self._prefill_fns: Dict[str, Callable] = {}
         self._prefill_traces = 0     # bumped at trace time (tests pin it)
+        # (tenant, bucket) pairs already traced by the CURRENT prefill
+        # closures: a trace of a seen pair is a re-trace (the registry's
+        # serve_jit_retraces_total).  Cleared per tenant at promotion,
+        # where the closure legitimately rebuilds.
+        self._prefill_seen: set = set()
         self._swap: Optional[HotSwapper] = None
+        self._swap_t0: Optional[float] = None
         self.swap_history: List[Dict[str, Any]] = []
+        for t, lane in self._lanes.items():
+            self._set_qos_gauges(t, lane)
+
+    # -- telemetry helpers ---------------------------------------------------
+
+    def _set_qos_gauges(self, tenant: str, lane: _Lane) -> None:
+        self.metrics.gauge(
+            "serve_qos_weight",
+            help="configured QoS weight per tenant lane").set(
+                lane.weight, tenant=tenant)
+        self.metrics.gauge(
+            "serve_qos_slot_quota",
+            help="decode slots the QoS-weighted split granted").set(
+                lane.n_slots, tenant=tenant)
+
+    def _account_tokens(self, lane: _Lane, n: int, kind: str) -> None:
+        """Count ``n`` emitted tokens on a lane: the QoS served-token
+        figure, plus modeled device-read time and energy split by read
+        mode (Table-I constants via ``device_token_cost``)."""
+        if n <= 0:
+            return
+        lane.tokens_served += n
+        if not self.metrics.enabled:
+            return
+        self.metrics.counter(
+            "serve_tokens_total",
+            help="tokens emitted, by tenant and kind "
+                 "(admission|decode)").inc(n, tenant=lane.tenant, kind=kind)
+        if lane.device_cost:
+            for mode, c in lane.device_cost.items():
+                self.metrics.counter(
+                    "serve_device_read_seconds_total",
+                    help="modeled device read time spent producing "
+                         "tokens, by read mode (t_read accounting)").inc(
+                    n * c["read_s"], tenant=lane.tenant, mode=mode)
+                self.metrics.counter(
+                    "serve_device_energy_joules_total",
+                    help="modeled worst-case analog read energy spent "
+                         "producing tokens, by read mode").inc(
+                    n * c["energy_j"], tenant=lane.tenant, mode=mode)
+
+    def _finish_request(self, lane: _Lane, req: Request) -> None:
+        """Completion bookkeeping: counter + the request's span set."""
+        req.done = True
+        self.metrics.counter(
+            "serve_requests_completed_total",
+            help="requests that emitted their full max_new budget").inc(
+                tenant=lane.tenant)
+        tr = self.tracer
+        if not tr.enabled or req.t_submit is None:
+            return
+        tr.record("queue_wait", req.t_submit, req.t_admit,
+                  rid=req.rid, tenant=lane.tenant)
+        tr.record("prefill", req.t_admit, req.t_first,
+                  rid=req.rid, tenant=lane.tenant, bucket=req.bucket)
+        tr.record("decode", req.t_first, req.t_done,
+                  rid=req.rid, tenant=lane.tenant, n_tokens=len(req.out))
+        tr.record("request", req.t_submit, req.t_done,
+                  rid=req.rid, tenant=lane.tenant, bucket=req.bucket,
+                  n_tokens=len(req.out),
+                  ttft_s=req.t_first - req.t_submit)
 
     # -- lanes ---------------------------------------------------------------
 
     def _make_lane(self, tenant: str, params) -> _Lane:
         n = self._slot_quota.get(tenant, self.n_slots)
+        ex = self.model.executor
         return _Lane(tenant=tenant, params=params,
                      slots=[None] * n,
                      cache=self.model.init_cache(n, self.max_len),
                      tokens=jnp.zeros((n, 1), jnp.int32),
                      queue=[], decode=self._make_decode(tenant),
-                     n_slots=n, weight=self._weights.get(tenant, 1.0))
+                     n_slots=n, weight=self._weights.get(tenant, 1.0),
+                     device_cost=(ex.device_token_cost(tenant)
+                                  if ex is not None else None))
 
     def _lane_order(self) -> List[str]:
         """QoS admission/decode order: heavier lanes first, name breaks
@@ -252,12 +345,29 @@ class BatchScheduler:
         back to the reference scan."""
         base = make_decode_step(self.model)
         ex = self.model.executor
+        n_traces = [0]
+
+        def _note_trace():
+            # host-side code in a jitted body runs at trace time only:
+            # each call here is exactly one (re)trace of THIS closure.
+            # Any trace beyond the first is a re-trace — the runtime
+            # counter behind the "zero re-traces at swap-window
+            # boundaries" invariant (closure rebuilds at promotion get
+            # a fresh counter, so their first trace is expected).
+            n_traces[0] += 1
+            obs.note_jit_trace("decode", tenant, retrace=n_traces[0] > 1)
+
         if ex is None:
-            digital = jax.jit(base, donate_argnums=(2,))
+            def digital_step(params, tokens, cache):
+                _note_trace()
+                return base(params, tokens, cache)
+
+            digital = jax.jit(digital_step, donate_argnums=(2,))
             return lambda params, tokens, cache, leak: digital(
                 params, tokens, cache)
 
         def tenant_step(params, tokens, cache, leak):
+            _note_trace()
             with ex.read_tenant(tenant), ex.leak_scope(leak):
                 return base(params, tokens, cache)
 
@@ -283,6 +393,11 @@ class BatchScheduler:
             raise ValueError(
                 f"request {req.rid} routes to unknown tenant "
                 f"{req.model_id!r}; serving {self.tenants}")
+        req.t_submit = self.tracer.now()
+        self.metrics.counter(
+            "serve_requests_submitted_total",
+            help="requests accepted into a tenant queue").inc(
+                tenant=lane.tenant)
         lane.queue.append(req)
 
     # -- deep-net-mode hot-swap (serve reads while shadow planes program) ----
@@ -317,6 +432,7 @@ class BatchScheduler:
         self._swap = HotSwapper(self.model.executor, new_params,
                                 chunks_per_step=chunks_per_step,
                                 tenant=tenant)
+        self._swap_t0 = self.tracer.now()
         lane = self._lanes.get(tenant)
         if lane is not None and self._swap.plan.in_place:
             lane.paused = True
@@ -338,6 +454,11 @@ class BatchScheduler:
         # closure — it flows as a traced argument (leak_scope) — so the
         # other tenant's buckets stay warm across the window.
         self._prefill_fns.pop(tenant, None)
+        # the dropped closures' bucket traces no longer count as "seen":
+        # the rebuilt prefill's first trace per bucket is expected, not
+        # a re-trace (same reasoning as the fresh decode trace counter)
+        self._prefill_seen = {k for k in self._prefill_seen
+                              if k[0] != tenant}
         lane = self._lanes.get(tenant)
         if lane is None:
             if tenant not in self._weights:
@@ -356,6 +477,26 @@ class BatchScheduler:
             lane.params = new_params
             lane.decode = self._make_decode(tenant)
             lane.paused = False
+            ex = self.model.executor
+            if ex is not None:
+                lane.device_cost = ex.device_token_cost(tenant)
+        self._set_qos_gauges(tenant, self._lanes[tenant])
+
+    def _note_swap_window(self, tenant: str, lifecycle: str, policy: str,
+                          rep: Dict[str, Any]) -> None:
+        """Record a completed swap window: one counter bump plus a span
+        tagged with its lifecycle (``staged``/``in_place``) and policy
+        (``overlapped``/``stop_the_world``)."""
+        self.metrics.counter(
+            "serve_swap_windows_total",
+            help="completed swap windows, by lifecycle and policy").inc(
+                tenant=tenant, lifecycle=lifecycle, policy=policy)
+        if self._swap_t0 is not None:
+            self.tracer.record(
+                "swap_window", self._swap_t0, self.tracer.now(),
+                tenant=tenant, lifecycle=lifecycle, policy=policy,
+                chunks=rep.get("n_chunks"),
+                decode_steps_during=rep.get("decode_steps_during_swap"))
 
     def stop_the_world_swap(self, new_params,
                             tenant: str = "A") -> Dict[str, Any]:
@@ -381,7 +522,12 @@ class BatchScheduler:
                              decode_steps_during=0, wall_swap_s=wall)
         rep["policy"] = "stop_the_world"
         rep["tenant"] = tenant
+        rep["swap_mode"] = stats.get("swap_mode", "staged")
         self.swap_history.append(rep)
+        self._swap_t0 = t0
+        self._note_swap_window(tenant, rep["swap_mode"],
+                               "stop_the_world", rep)
+        self._swap_t0 = None
         return stats
 
     def _advance_swap(self):
@@ -394,8 +540,12 @@ class BatchScheduler:
         if sw.done:
             new_params = sw.promote()
             self._apply_promotion(sw.tenant, new_params)
-            self.swap_history.append(sw.report(batch_size=self.n_slots))
+            rep = sw.report(batch_size=self.n_slots)
+            self.swap_history.append(rep)
+            self._note_swap_window(sw.tenant, rep["swap_mode"],
+                                   "overlapped", rep)
             self._swap = None
+            self._swap_t0 = None
 
     # -- admission (jitted, bucketed prefill) --------------------------------
 
@@ -421,6 +571,10 @@ class BatchScheduler:
 
         def pf(params, tokens_pad, last_tok, m):
             self._prefill_traces += 1       # trace-time only (host state)
+            key = (tenant, int(tokens_pad.shape[1]))
+            obs.note_jit_trace("prefill", tenant,
+                               retrace=key in self._prefill_seen)
+            self._prefill_seen.add(key)
             cache = model.init_cache(tokens_pad.shape[0], max_len)
             _, cache = model.prefill(params, {"tokens": tokens_pad}, cache)
             layers = dict(cache["layers"])
@@ -485,6 +639,10 @@ class BatchScheduler:
                 lane.tenant)
         bucket = _prompt_bucket(int(group[0].prompt.shape[0]) - 1,
                                 self.max_len)
+        t_admit = self.tracer.now()
+        for req in group:
+            req.t_admit = t_admit
+            req.bucket = bucket
         b = lane.n_slots
         tokens_pad = jnp.zeros((b, bucket), jnp.int32)
         last = jnp.zeros((b, 1), jnp.int32)
@@ -507,12 +665,23 @@ class BatchScheduler:
             toks, cache_b = self._prefill_group(lane, group)
             for j, req in enumerate(group):
                 req.out.append(int(toks[j]))
-                lane.tokens_served += 1
+                req.t_first = self.tracer.now()
+                self._account_tokens(lane, 1, "admission")
+                if self.metrics.enabled and req.t_submit is not None:
+                    self.metrics.histogram(
+                        "serve_queue_wait_seconds",
+                        help="submit-to-admission wait").observe(
+                        req.t_admit - req.t_submit, tenant=lane.tenant)
+                    self.metrics.histogram(
+                        "serve_ttft_seconds",
+                        help="submit to first emitted token").observe(
+                        req.t_first - req.t_submit, tenant=lane.tenant)
                 if len(req.out) >= req.max_new:
                     # the admission token already met the budget: finish
                     # here and keep the slot free for the next request —
                     # no decode step burned, no extra token emitted
-                    req.done = True
+                    req.t_done = req.t_first
+                    self._finish_request(lane, req)
                     finished.append(req)
                     continue
                 slot = free.pop(0)
@@ -550,41 +719,108 @@ class BatchScheduler:
             self._admit(lane, finished)
             if all(s is None for s in lane.slots):
                 continue
+            t0 = self.tracer.now()
             lane.tokens, lane.cache = lane.decode(
                 lane.params, lane.tokens, lane.cache, leak)
             decoded = True
+            n_emitted = 0
             for i, req in enumerate(lane.slots):
                 if req is None:
                     continue
                 req.out.append(int(lane.tokens[i, 0]))
-                lane.tokens_served += 1
+                n_emitted += 1
                 if len(req.out) >= req.max_new:
-                    req.done = True
+                    req.t_done = self.tracer.now()
+                    self._finish_request(lane, req)
                     finished.append(req)
                     lane.slots[i] = None
+            self._account_tokens(lane, n_emitted, "decode")
+            if self.metrics.enabled and n_emitted:
+                # every slot's token materialized in this one batched
+                # step, so the per-token latency IS the step wall time —
+                # observed once per emitted token so histogram mass
+                # weights by tokens, not steps
+                dt = self.tracer.now() - t0
+                h = self.metrics.histogram(
+                    "serve_token_latency_seconds",
+                    help="wall time of the decode step that produced "
+                         "each token")
+                for _ in range(n_emitted):
+                    h.observe(dt, tenant=lane.tenant)
         if decoded and self._swap is not None:
             self._swap.note_decode_step()
         return finished
 
-    def mode_report(self, tenant: str = "A") -> Dict[str, Any]:
+    def mode_report(self, tenant: Optional[str] = None) -> Dict[str, Any]:
         """Per-weight read-mode choices and their IR-drop economics for
         a tenant's plane set (``CrossbarExecutor.mode_report``) — the
-        operator-facing view of what ``mode_policy`` decided."""
-        if self.model.executor is None:
+        operator-facing view of what ``mode_policy`` decided — plus a
+        ``traffic`` block turning the static per-mode claims into live
+        traffic-weighted figures: tokens served and the modeled device
+        read time / energy / pJ-per-token accumulated per read mode.
+
+        ``tenant`` defaults to the scheduler's anchor tenant (the
+        executor's first plane, what ``params`` serves); asking for a
+        tenant this scheduler has no lane for is a ``KeyError`` naming
+        the resident tenants.
+        """
+        ex = self.model.executor
+        if ex is None:
             raise RuntimeError(
                 "mode_report requires the crossbar backend "
                 "(ModelConfig(backend='crossbar'))")
-        return self.model.executor.mode_report(tenant=tenant)
+        if tenant is None:
+            tenant = ex.anchor
+        lane = self._lanes.get(tenant)
+        if lane is None:
+            raise KeyError(
+                f"no lane for tenant {tenant!r}: this scheduler serves "
+                f"tenants {self.tenants}")
+        rep = ex.mode_report(tenant=tenant)
+        tokens = lane.tokens_served
+        modes: Dict[str, Any] = {}
+        for mode, cost in sorted((lane.device_cost or {}).items()):
+            if self.metrics.enabled:
+                read_s = self.metrics.total(
+                    "serve_device_read_seconds_total",
+                    tenant=tenant, mode=mode)
+                energy = self.metrics.total(
+                    "serve_device_energy_joules_total",
+                    tenant=tenant, mode=mode)
+            else:
+                # metrics off: the per-token cost is constant, so the
+                # accumulated figure is exactly cost * tokens
+                read_s = cost["read_s"] * tokens
+                energy = cost["energy_j"] * tokens
+            modes[mode] = {
+                "device_read_s": read_s,
+                "energy_j": energy,
+                "pj_per_token": (energy / tokens * 1e12
+                                 if tokens else 0.0),
+            }
+        rep["traffic"] = {"tokens_served": tokens, "modes": modes}
+        return rep
 
     def qos_report(self) -> Dict[str, Dict[str, Any]]:
         """Per-tenant QoS accounting in ``swap_history`` style: the
         configured weight, the slot quota the weighted split granted,
         and the served-token count/share so far (admission + decode
-        tokens) — the figure the weights are supposed to shift."""
-        total = sum(lane.tokens_served for lane in self._lanes.values())
+        tokens) — the figure the weights are supposed to shift.
+
+        A view over the scheduler registry when telemetry is on
+        (``serve_qos_*`` gauges + ``serve_tokens_total``); the lane
+        fields remain authoritative with telemetry off.
+        """
+        if self.metrics.enabled:
+            served = {t: int(self.metrics.total("serve_tokens_total",
+                                                tenant=t))
+                      for t in self._lanes}
+        else:
+            served = {t: lane.tokens_served
+                      for t, lane in self._lanes.items()}
+        total = sum(served.values())
         return {t: {"weight": lane.weight,
                     "slots": lane.n_slots,
-                    "tokens_served": lane.tokens_served,
-                    "token_share": (lane.tokens_served / total
-                                    if total else 0.0)}
+                    "tokens_served": served[t],
+                    "token_share": (served[t] / total if total else 0.0)}
                 for t, lane in sorted(self._lanes.items())}
