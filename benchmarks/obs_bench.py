@@ -163,7 +163,7 @@ def _decode_throughput(cfg, params, steps, repeats):
             t0 = time.perf_counter()
             for _ in range(steps):
                 sched.step()
-            jax.block_until_ready(lane.tokens)
+            jax.block_until_ready(lane.cache["layers"]["len"])
             dt = time.perf_counter() - t0
             best[arm] = max(best[arm],
                             (lane.tokens_served - tok0) / dt)

@@ -1,0 +1,292 @@
+"""Paged-serving smoke: the paged KV pool + ragged continuous batching
+under a real mixed-length workload, gated in the exit code (the CI
+"Paged-serving smoke" step).
+
+Phase 1 — ragged correctness (digital backend, one tenant): a stream of
+prompt lengths spanning 8..max_len (>= 4 of the old padded prefill
+buckets), admitted continuously, served twice — once from the paged
+pool, once from the dense per-slot cache.  Gates:
+
+  * zero dropped requests on both paths,
+  * **bit-exact token streams** paged vs dense (the end-to-end half of
+    the acceptance; the kernel-level half is test_paged_attention.py),
+  * exactly ONE compiled decode closure for the tenant and a ZERO
+    retrace delta across the whole mixed-length stream
+    (``serve_jit_traces_total`` / ``serve_jit_retraces_total``),
+  * page conservation at every step and full reclaim at drain
+    (``pages_in_use + pages_free == n_pages``).
+
+Phase 2 — decode throughput: steady-state tokens/s, paged vs dense
+(fresh schedulers, warmed closures, interleaved best-of windows), gated
+at paged >= 0.7x dense — the page-table gather must not cost the slot
+path its throughput (the 30 % headroom absorbs CPU-interpret noise; on
+TPU the gather is a kernel prefetch).
+
+Phase 3 — multi-tenant + swap (crossbar backend): A/B multiplexed
+serving of the same mixed-length stream with a mid-stream tenant-B
+hot-swap.  Gates: zero dropped requests, zero retraces across the swap
+window, conservation on every lane's pool, and decode steps served
+DURING the write window (admissions kept flowing).
+
+CLI: ``python benchmarks/paged_bench.py --json BENCH_paged.json`` (exits
+nonzero if any gate fails).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import obs  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.core.engine import EngineConfig  # noqa: E402
+from repro.core.quant import QuantConfig  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.serve.engine import BatchScheduler, Request  # noqa: E402
+from repro.serve.hotswap import finetune_delta  # noqa: E402
+
+_XBAR = EngineConfig(tile_rows=64, tile_cols=128, mode="deepnet",
+                     quant=QuantConfig(w_bits=4, in_bits=10, adc_bits=10))
+
+_N_SLOTS, _MAX_LEN, _PAGE_SIZE = 3, 64, 8
+# spans the old 8/16/32/64 padded buckets
+_PLENS = (8, 13, 22, 35, 50, 62)
+_THROUGHPUT_GATE = 0.7
+
+
+def _digital_cfg():
+    return get_config("qwen3_4b", smoke=True)
+
+
+def _crossbar_cfg():
+    return dataclasses.replace(_digital_cfg(), backend="crossbar",
+                               xbar=_XBAR)
+
+
+def _prompt(rid, vocab, plen):
+    return jax.random.randint(jax.random.PRNGKey(rid), (plen,), 0,
+                              vocab - 1).astype(jnp.int32)
+
+
+def _serve_stream(sched, vocab, plens, max_new, model_id="A", rid0=0,
+                  trickle=2, on_step=None):
+    """Admit ``plens`` continuously (one submit every ``trickle`` steps)
+    and drain; returns ({rid: tokens}, steps, conservation_held)."""
+    pending = [(rid0 + i, p) for i, p in enumerate(plens)]
+    done, steps, conserved = {}, 0, True
+    while (len(done) < len(plens)) and steps < 1000:
+        if pending and steps % trickle == 0:
+            rid, plen = pending.pop(0)
+            sched.submit(Request(rid=rid, prompt=_prompt(rid, vocab, plen),
+                                 max_new=max_new, model_id=model_id))
+        for r in sched.step():
+            done[r.rid] = list(r.out)
+        for rep in sched.kv_report().values():
+            conserved = conserved and rep["conservation_ok"]
+        if on_step is not None:
+            on_step(steps)
+        steps += 1
+    return done, steps, conserved
+
+
+def _ragged_phase(max_new):
+    """Paged vs dense over the mixed-length stream (digital backend)."""
+    cfg = _digital_cfg()
+    reg = obs.registry()
+    out = {}
+    for kv in ("paged", "dense"):
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        traces0 = reg.total("serve_jit_traces_total", closure="decode")
+        retr0 = reg.total("serve_jit_retraces_total")
+        sched = BatchScheduler(model, params, _N_SLOTS, _MAX_LEN, kv=kv,
+                               page_size=_PAGE_SIZE)
+        done, steps, conserved = _serve_stream(sched, cfg.vocab, _PLENS,
+                                               max_new)
+        pool_rep = sched.kv_report().get("A", {})
+        out[kv] = {
+            "streams": done,
+            "completed": len(done),
+            "steps": steps,
+            "closures_traced": reg.total("serve_jit_traces_total",
+                                         closure="decode") - traces0,
+            "retrace_delta": reg.total("serve_jit_retraces_total") - retr0,
+            "conservation_every_step": conserved,
+            "pages_in_use_at_drain": pool_rep.get("pages_in_use", 0),
+        }
+    return out
+
+
+def _throughput_phase(steps, repeats):
+    """Steady-state decode tokens/s, paged vs dense, interleaved timed
+    windows so machine drift hits both arms equally."""
+    cfg = _digital_cfg()
+    scheds = {}
+    for kv in ("dense", "paged"):
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        sched = BatchScheduler(model, params, _N_SLOTS, _MAX_LEN, kv=kv,
+                               page_size=_PAGE_SIZE)
+        budget = (repeats + 2) * steps + 8
+        for rid in range(_N_SLOTS):
+            sched.submit(Request(rid=rid,
+                                 prompt=_prompt(rid, cfg.vocab, 6),
+                                 max_new=budget))
+        for _ in range(4):      # admission chunks + decode warm
+            sched.step()
+        scheds[kv] = sched
+    best = {"dense": 0.0, "paged": 0.0}
+    for _ in range(repeats):
+        for kv, sched in scheds.items():
+            lane = sched._lanes["A"]
+            tok0 = lane.tokens_served
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                sched.step()
+            jax.block_until_ready(lane.cache["layers"]["len"])
+            dt = time.perf_counter() - t0
+            best[kv] = max(best[kv], (lane.tokens_served - tok0) / dt)
+    return best["dense"], best["paged"]
+
+
+def _swap_phase(max_new):
+    """A/B multiplexed mixed-length stream with a mid-stream tenant-B
+    hot-swap over the paged pool."""
+    cfg = _crossbar_cfg()
+    reg = obs.registry()
+    model = build_model(cfg)
+    params_a = model.init(jax.random.PRNGKey(0))
+    params_b = finetune_delta(params_a, scale=0.04, seed=11)
+    params_b2 = finetune_delta(params_a, scale=0.07, seed=23)
+    sched = BatchScheduler(model, params_a, _N_SLOTS, _MAX_LEN,
+                           tenants={"A": params_a, "B": params_b},
+                           page_size=_PAGE_SIZE)
+    n = len(_PLENS)
+    for i, plen in enumerate(_PLENS):
+        sched.submit(Request(rid=i, prompt=_prompt(i, cfg.vocab, plen),
+                             max_new=max_new, model_id="A"))
+        sched.submit(Request(rid=100 + i,
+                             prompt=_prompt(100 + i, cfg.vocab, plen),
+                             max_new=max_new, model_id="B"))
+    for _ in range(3):
+        sched.step()
+    retr0 = reg.total("serve_jit_retraces_total")
+    sched.begin_hot_swap(params_b2, chunks_per_step=4, tenant="B")
+    done, steps, conserved = {}, 0, True
+    while (len(done) < 2 * n or sched.swap_in_flight) and steps < 1000:
+        for r in sched.step():
+            done[r.rid] = list(r.out)
+        for rep in sched.kv_report().values():
+            conserved = conserved and rep["conservation_ok"]
+        steps += 1
+    swap_rep = sched.swap_history[0] if sched.swap_history else {}
+    pools = sched.kv_report()
+    return {
+        "completed": len(done),
+        "expected": 2 * n,
+        "steps": steps,
+        "retraces_across_swap_window":
+            reg.total("serve_jit_retraces_total") - retr0,
+        "swap_lifecycle": swap_rep.get("swap_mode"),
+        "swap_decode_steps_during":
+            swap_rep.get("decode_steps_during_swap", 0),
+        "conservation_every_step": conserved,
+        "pages_in_use_at_drain": sum(p["pages_in_use"]
+                                     for p in pools.values()),
+        "pools": pools,
+    }
+
+
+def bench_paged(quick: bool = False):
+    max_new = 5 if quick else 10
+    steps, repeats = (25, 3) if quick else (50, 5)
+
+    ragged = _ragged_phase(max_new)
+    bit_exact = ragged["paged"]["streams"] == ragged["dense"]["streams"]
+    thr_dense, thr_paged = _throughput_phase(steps, repeats)
+    swap = _swap_phase(max_new)
+
+    return {
+        "us_per_call": 0.0,
+        "n_requests": len(_PLENS),
+        "prompt_lens": list(_PLENS),
+        "former_buckets_spanned": 4,
+        "paged_completed": ragged["paged"]["completed"],
+        "dense_completed": ragged["dense"]["completed"],
+        "paged_vs_dense_bit_exact": bool(bit_exact),
+        "paged_closures_traced": ragged["paged"]["closures_traced"],
+        "paged_retrace_delta": ragged["paged"]["retrace_delta"],
+        "dense_closures_traced": ragged["dense"]["closures_traced"],
+        "dense_retrace_delta": ragged["dense"]["retrace_delta"],
+        "page_conservation_every_step":
+            bool(ragged["paged"]["conservation_every_step"]),
+        "pages_in_use_at_drain": ragged["paged"]["pages_in_use_at_drain"],
+        "decode_tok_per_s_dense": thr_dense,
+        "decode_tok_per_s_paged": thr_paged,
+        "paged_over_dense_throughput": thr_paged / max(thr_dense, 1e-12),
+        "throughput_gate": _THROUGHPUT_GATE,
+        "swap": swap,
+    }
+
+
+def accepted(res) -> bool:
+    swap = res["swap"]
+    return (res["paged_completed"] == res["n_requests"]
+            and res["dense_completed"] == res["n_requests"]
+            and res["paged_vs_dense_bit_exact"]
+            and res["paged_closures_traced"] == 1
+            and res["paged_retrace_delta"] == 0
+            and res["page_conservation_every_step"]
+            and res["pages_in_use_at_drain"] == 0
+            and res["paged_over_dense_throughput"]
+            >= res["throughput_gate"]
+            and swap["completed"] == swap["expected"]
+            and swap["retraces_across_swap_window"] == 0
+            and swap["swap_decode_steps_during"] > 0
+            and swap["conservation_every_step"]
+            and swap["pages_in_use_at_drain"] == 0)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_paged.json")
+    args = ap.parse_args(argv)
+    res = bench_paged(quick=True)
+    print("name,us_per_call,derived")
+    derived = {k: v for k, v in res.items() if k != "us_per_call"}
+    print(f"paged_serving,{res['us_per_call']:.1f},"
+          f"{json.dumps(derived, default=float)}")
+    from benchmarks.meta import append_trajectory, write_stamped
+    results = {"paged_serving": res}
+    meta = write_stamped(results, args.json, lane="paged-smoke")
+    append_trajectory(meta, results)
+    print(f"# wrote {args.json} (sha={meta['git_sha'][:12]})")
+    ok = accepted(res)
+    swap = res["swap"]
+    print(f"# acceptance: paged==dense bit-exact "
+          f"({res['paged_vs_dense_bit_exact']}), closures traced "
+          f"{res['paged_closures_traced']} (want 1), retrace delta "
+          f"{res['paged_retrace_delta']} (want 0), conservation every "
+          f"step ({res['page_conservation_every_step']}), pages leaked "
+          f"at drain {res['pages_in_use_at_drain']} (want 0), "
+          f"throughput paged/dense "
+          f"{res['paged_over_dense_throughput']:.2f}x (gate >= "
+          f"{res['throughput_gate']}), swap: "
+          f"{swap['completed']}/{swap['expected']} done with "
+          f"{swap['retraces_across_swap_window']} retraces and "
+          f"{swap['swap_decode_steps_during']} decode steps in-window")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

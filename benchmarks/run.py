@@ -26,6 +26,7 @@ from benchmarks import hotswap_bench as hb  # noqa: E402
 from benchmarks import multiplex_bench as mb  # noqa: E402
 from benchmarks import obs_bench as ob  # noqa: E402
 from benchmarks import overlap_kernel_bench as okb  # noqa: E402
+from benchmarks import paged_bench as pgb  # noqa: E402
 from benchmarks import paper_benches as pb  # noqa: E402
 from benchmarks.meta import append_trajectory, write_stamped  # noqa: E402
 from repro import obs  # noqa: E402
@@ -52,6 +53,7 @@ RESIDENCY_BENCHES = [
     ("overlap_kernel_decode", okb.bench_overlap_kernel),
     ("expansion_mode_policy", eb.bench_expansion),
     ("obs_telemetry", ob.bench_obs),
+    ("paged_serving", pgb.bench_paged),
 ]
 
 
@@ -78,7 +80,8 @@ def main(argv=None) -> None:
                                   "multiplex_plane_sharing",
                                   "overlap_kernel_decode",
                                   "expansion_mode_policy",
-                                  "obs_telemetry")]
+                                  "obs_telemetry",
+                                  "paged_serving")]
     benches = ([(n, lambda f=f: f(quick=True)) for n, f in quick_benches]
                if args.quick else
                BENCHES + [(n, f) for n, f in RESIDENCY_BENCHES])

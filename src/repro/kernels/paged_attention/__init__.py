@@ -1,0 +1,13 @@
+"""Paged ragged decode attention: Pallas kernel + pure-jnp oracle.
+
+``paged_attention`` (ops.py) gathers each row's K/V through its page
+table and runs grouped SDPA with per-row lengths and causal offsets —
+the kernel behind ``AttnConfig.paged_kernel``.  ``paged_attention_ref``
+(ref.py) is the standalone oracle the interpret-mode CI pins the kernel
+against, bit-exactly; both are bit-exact vs the dense ``_sdpa`` path at
+equal cache contents (tests/test_paged_attention.py).
+"""
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+__all__ = ["paged_attention", "paged_attention_ref"]

@@ -1,0 +1,118 @@
+"""Pallas kernel: paged ragged decode attention.
+
+Grid = (batch,): each step serves ONE sequence row.  Inside the body:
+
+  * the row's page table (a (1, P_seq) int32 operand) drives a staticly
+    unrolled gather — each logical page is a dynamic-index load from the
+    physical page pool into a VMEM scratch buffer, materializing the
+    row's logical K/V view (depth = P_seq * page_size == max_len),
+  * grouped SDPA over that view with the EXACT dense-path math: the same
+    einsum contraction strings as ``models/layers._sdpa`` (f32
+    accumulation via ``preferred_element_type``), the same -1e30 causal
+    and length mask constants, the same softmax — so the kernel is
+    bit-exact vs both ``ref.py`` and the dense cache path at equal
+    contents (the interpret-mode CI pins this),
+  * per-row scalars ``kv_len`` (valid depth) and ``q_offset`` (absolute
+    position of the window's first query) arrive as (1, 1) SMEM operands
+    — rows sit at different depths under continuous batching, and the
+    causal offset must not be a trace constant.
+
+VMEM budget per step (one row): the gathered K+V views dominate at
+2 * max_len * kv_heads * head_dim elements — at the serving tier's
+decode shapes (max_len <= a few k, GQA'd kv_heads) this is well under
+the 16 MB v5e budget.  TPU porting notes live in docs/KERNELS.md: the
+gather loop wants scalar-prefetch (PrefetchScalarGridSpec) so page ids
+are known before the DMA, and a production flash-style online-softmax
+variant would trade the bitwise-equality contract for O(page) memory.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import smem_scalar_spec, tpu_compiler_params
+
+
+def _kernel(pt_ref, len_ref, off_ref, q_ref, k_ref, v_ref, out_ref,
+            ks_ref, vs_ref, *, page_size: int, pages_per_seq: int,
+            causal: bool):
+    ps = page_size
+    # gather: logical page i of this row lives at physical page pt[i]
+    # (0 = the null page — unallocated entries read zeros that the
+    # length mask below excludes exactly)
+    for i in range(pages_per_seq):
+        pg = pt_ref[0, i]
+        ks_ref[pl.ds(i * ps, ps)] = k_ref[pl.ds(pg, 1)].reshape(
+            ps, *k_ref.shape[2:])
+        vs_ref[pl.ds(i * ps, ps)] = v_ref[pl.ds(pg, 1)].reshape(
+            ps, *v_ref.shape[2:])
+    kk = ks_ref[...]                       # (depth, kv, hd)
+    vv = vs_ref[...]
+    q = q_ref[0]                           # (sq, hq, hd)
+    if kk.dtype != q.dtype:   # low-precision (fp8) cache: upcast in-dot
+        kk = kk.astype(q.dtype)
+        vv = vv.astype(q.dtype)
+    sq, hq, hd = q.shape
+    depth, kv = kk.shape[0], kk.shape[1]
+    g = hq // kv
+    qg = q.reshape(sq, kv, g, hd)
+    scale = hd ** -0.5
+    # identical contraction to _sdpa's "bskgh,btkh->bkgst" at B = 1
+    logits = jnp.einsum("skgh,tkh->kgst", qg, kk,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = off_ref[0, 0] + jnp.arange(sq)
+        mask = qpos[:, None] >= jnp.arange(depth)[None, :]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    valid = jnp.arange(depth) < len_ref[0, 0]
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("kgst,tkh->skgh", w.astype(vv.dtype), vv)
+    out_ref[0] = out.reshape(sq, hq, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def paged_attention_kernel(q, k_pages, v_pages, page_table, kv_len,
+                           q_offset, *, causal: bool = True,
+                           interpret: bool = True):
+    """q (B, sq, hq, hd); k/v pages (P+1, ps, kv, hd); page_table
+    (B, P_seq) int32; kv_len/q_offset (B,) int32 -> (B, sq, hq, hd).
+
+    ``kv_len`` and ``q_offset`` are traced operands: rows at different
+    cache depths share ONE lowered kernel.  interpret=True on CPU; False
+    on real TPU.
+    """
+    b, sq, hq, hd = q.shape
+    p1, ps, kv, _ = k_pages.shape
+    p_seq = page_table.shape[1]
+    depth = p_seq * ps
+    grid = (b,)
+    return pl.pallas_call(
+        functools.partial(_kernel, page_size=ps, pages_per_seq=p_seq,
+                          causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, p_seq), lambda i: (i, 0)),
+            smem_scalar_spec(lambda i: (i, 0)),
+            smem_scalar_spec(lambda i: (i, 0)),
+            pl.BlockSpec((1, sq, hq, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((p1, ps, kv, hd), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((p1, ps, kv, hd), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, sq, hq, hd), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, hq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((depth, kv, hd), k_pages.dtype),
+            pltpu.VMEM((depth, kv, hd), v_pages.dtype),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(page_table,
+      kv_len.astype(jnp.int32).reshape(b, 1),
+      q_offset.astype(jnp.int32).reshape(b, 1),
+      q, k_pages, v_pages)

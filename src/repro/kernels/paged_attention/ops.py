@@ -1,0 +1,39 @@
+"""Shape-checked entry point for the paged-attention kernel.
+
+Mirrors crossbar_mac's layering: ops validates/normalizes operands and
+dispatches the kernel; the kernel stays a pure shape-in/shape-out
+Pallas call.  No padding is needed here — the serving tier guarantees
+``page_size | max_len`` (kv_pool.py enforces it), so the gathered depth
+is already the dense path's ``max_len``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_kernel
+
+
+def paged_attention(q, k_pages, v_pages, page_table, kv_len, q_offset,
+                    *, causal: bool = True, interpret: bool = True):
+    """Ragged paged decode attention; see kernel.py for the contract."""
+    b, sq, hq, hd = q.shape
+    if k_pages.shape != v_pages.shape:
+        raise ValueError(f"k/v page pools disagree: {k_pages.shape} vs "
+                         f"{v_pages.shape}")
+    p1, ps, kv, hd2 = k_pages.shape
+    if hd2 != hd:
+        raise ValueError(f"head_dim mismatch: q {hd} vs pages {hd2}")
+    if hq % kv:
+        raise ValueError(f"n_heads {hq} not a multiple of kv heads {kv}")
+    if page_table.shape[0] != b:
+        raise ValueError(f"page_table rows {page_table.shape[0]} != "
+                         f"batch {b}")
+    kv_len = jnp.asarray(kv_len)
+    q_offset = jnp.asarray(q_offset)
+    if kv_len.shape != (b,) or q_offset.shape != (b,):
+        raise ValueError(f"kv_len/q_offset want shape ({b},), got "
+                         f"{kv_len.shape}/{q_offset.shape}")
+    return paged_attention_kernel(q, k_pages, v_pages,
+                                  page_table.astype(jnp.int32), kv_len,
+                                  q_offset, causal=causal,
+                                  interpret=interpret)

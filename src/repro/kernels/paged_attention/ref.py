@@ -1,0 +1,51 @@
+"""Reference paged decode attention (pure jnp): the oracle the Pallas
+kernel is pinned against, bit-for-bit, in interpret-mode CI.
+
+The math is the dense ``models/layers._sdpa`` decode path verbatim —
+same einsum contraction strings, same f32 accumulation, same -1e30
+mask constants — applied to the K/V view gathered through the page
+table.  Because ``page_size`` divides ``max_len``, the gathered view is
+exactly ``max_len`` deep, so equal cache contents give bit-identical
+logits, softmax weights, and outputs vs the dense cache path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_pages(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """(P+1, ps, kv, hd) pages + (B, P_seq) table -> (B, depth, kv, hd)
+    logical view, depth = P_seq * ps (== max_len)."""
+    b, p_seq = page_table.shape
+    ps = pages.shape[1]
+    return pages[page_table].reshape(b, p_seq * ps, *pages.shape[2:])
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, kv_len, q_offset,
+                        *, causal: bool = True):
+    """q (B, sq, hq, hd); k/v pages (P+1, ps, kv, hd); page_table
+    (B, P_seq) int32; kv_len/q_offset (B,) int32 -> (B, sq, hq, hd)."""
+    b, sq, hq, hd = q.shape
+    gk = gather_pages(k_pages, page_table)
+    gv = gather_pages(v_pages, page_table)
+    depth = gk.shape[1]
+    if gk.dtype != q.dtype:   # low-precision (fp8) cache: upcast in-dot
+        gk = gk.astype(q.dtype)
+        gv = gv.astype(q.dtype)
+    kv = gk.shape[2]
+    g = hq // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, gk,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = (jnp.asarray(q_offset).reshape(-1, 1)
+                + jnp.arange(sq)[None])
+        mask = qpos[:, :, None] >= jnp.arange(depth)[None, None, :]
+        logits = jnp.where(mask[:, None, None], logits, -1e30)
+    valid = jnp.arange(depth)[None, :] < kv_len[:, None]
+    logits = jnp.where(valid[:, None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w.astype(gv.dtype), gv)
+    return out.reshape(b, sq, hq, hd)

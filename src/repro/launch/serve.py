@@ -8,6 +8,13 @@ on a fleet the same file serves the full config on the production mesh
 crossbar tiles: weights are programmed once at scheduler construction and
 every decode step is a read-only bit-serial MAC (core/executor.py).
 
+KV storage defaults to the block-paged pool (``--kv paged``): fixed
+``--page-size`` pages, per-slot page tables, free-list alloc/reclaim;
+prompts of any length stream into the running batch as ``--chunk``-token
+prefill chunks through ONE compiled closure per tenant (no length
+buckets, zero re-traces for any prompt mix).  ``--kv dense`` keeps the
+per-slot dense cache — same closure and bit-identical streams.
+
 ``--hot-swap SPEC`` deploys a second checkpoint under live traffic
 (deep-net mode at the serving tier, serve/hotswap.py): the new weights
 program onto the write-shadow planes between decode steps and an atomic
@@ -113,6 +120,21 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--kv", default="paged", choices=["paged", "dense"],
+                    help="KV storage: paged = block-paged pool with "
+                         "per-slot page tables (serve/kv_pool.py); dense "
+                         "= per-slot dense cache (the bit-exactness "
+                         "oracle)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page (must divide --max-len)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="per-tenant page-pool budget for the "
+                         "QoS-weighted split (default: slots * max_len "
+                         "/ page_size pages per lane, i.e. no "
+                         "oversubscription)")
+    ap.add_argument("--chunk", type=int, default=4,
+                    help="prompt tokens fed per step while a request "
+                         "prefills inside the running decode batch")
     ap.add_argument("--hot-swap", default=None, metavar="SPEC",
                     help="second checkpoint to deploy mid-serving "
                          "(ft:<scale> | seed:<int> | checkpoint dir); "
@@ -223,7 +245,14 @@ def main(argv=None):
     sched = BatchScheduler(model, params, n_slots=args.slots,
                            max_len=args.max_len, tenants=tenants,
                            mode_policy=mode_policy,
-                           telemetry=not args.no_telemetry)
+                           telemetry=not args.no_telemetry,
+                           kv=args.kv, page_size=args.page_size,
+                           kv_pages=args.kv_pages, chunk=args.chunk)
+    if args.kv == "paged":
+        pools = sched.kv_report()
+        desc = ", ".join(f"{t}:{r['n_pages']}p" for t, r in pools.items())
+        print(f"paged KV: page_size={args.page_size} tokens, pools "
+              f"[{desc}], chunk={args.chunk} prompt tokens/step")
     if model.executor is not None:
         ex = model.executor
         print(f"crossbar backend: {ex.n_resident} resident weight grids, "

@@ -130,6 +130,8 @@ class AttnConfig:
     mrope: bool = False
     q_chunk: int = 0            # 0 = unchunked; else chunk the query axis
     chunk_unroll: bool = True   # unroll the q-chunk loop (see DESIGN §5)
+    paged_kernel: bool = False  # paged decode via the Pallas kernel
+    kernel_interpret: bool = True  # Pallas interpret mode (CPU container)
 
     @property
     def kv_eff(self) -> int:
@@ -267,6 +269,41 @@ def attention(p, cfg: AttnConfig, x, positions, cache=None,
         q, k, v = _project_qkv(p, cfg, x, positions)
         out = _chunked_sdpa(q, k, v, cfg)
         new_cache = None
+    elif "pt" in cache:
+        # paged decode: route this window's K/V writes through the page
+        # table, then attend over the gathered logical view.  ``pt`` maps
+        # each row's logical pages to physical pages of the pool arrays
+        # (leading axis n_pages + 1); physical page 0 is the reserved
+        # null page — unallocated entries point at it, so out-of-range
+        # writes land there (the dense path's dropped-OOB-scatter
+        # semantics) and gathers through it read only masked positions.
+        q, k, v = _project_qkv(p, cfg, x, positions)
+        pos = cache["len"]                                # (B,)
+        pt = cache["pt"]                                  # (B, P_seq)
+        ps = cache["k"].shape[1]
+        depth = pt.shape[1] * ps                          # == max_len
+        s_idx = pos[:, None] + jnp.arange(sq)[None]       # (B, sq)
+        inb = s_idx < depth
+        lpage = jnp.minimum(s_idx // ps, pt.shape[1] - 1)
+        phys = jnp.where(inb, jnp.take_along_axis(pt, lpage, axis=1), 0)
+        slot = jnp.where(inb, s_idx % ps, 0)
+        ck = cache["k"].at[phys, slot].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[phys, slot].set(v.astype(cache["v"].dtype))
+        new_len = cache["len"] + sq
+        if cfg.paged_kernel:
+            from repro.kernels.paged_attention import paged_attention
+            out = paged_attention(q, ck, cv, pt, new_len, pos,
+                                  causal=cfg.causal,
+                                  interpret=cfg.kernel_interpret)
+        else:
+            # gather width is exactly max_len (page_size | max_len), so
+            # the SDPA below sees the same einsum shapes as the dense
+            # branch — the bit-exactness contract with that path
+            gk = ck[pt].reshape(b, depth, *ck.shape[2:])
+            gv = cv[pt].reshape(b, depth, *cv.shape[2:])
+            out = _chunked_sdpa(q, gk, gv, cfg, kv_len=new_len,
+                                q_offset=pos)
+        new_cache = {"k": ck, "v": cv, "len": new_len, "pt": pt}
     else:
         # decode: append this step's K/V at each row's own fill position —
         # slots admitted with different prompt lengths sit at different
@@ -301,6 +338,29 @@ def cache_specs(cfg: AttnConfig):
     return {"k": ("batch", "kv_seq", "act_kv_heads", None),
             "v": ("batch", "kv_seq", "act_kv_heads", None),
             "len": ("batch",)}
+
+
+def paged_init_cache(cfg: AttnConfig, batch: int, max_len: int,
+                     n_pages: int, page_size: int, dtype=jnp.bfloat16):
+    """Paged KV cache for one layer: a physical page pool plus per-row
+    page tables.  Page 0 is the reserved null page (see serve/kv_pool.py);
+    ``page_size`` must divide ``max_len`` so a full gather through the
+    table is exactly ``max_len`` deep (the dense-path bit-exactness
+    contract)."""
+    if max_len % page_size:
+        raise ValueError(f"page_size {page_size} must divide max_len "
+                         f"{max_len}")
+    shape = (n_pages + 1, page_size, cfg.kv_eff, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.zeros((batch,), jnp.int32),
+            "pt": jnp.zeros((batch, max_len // page_size), jnp.int32)}
+
+
+def paged_cache_specs(cfg: AttnConfig):
+    # the page axis is unsharded: pages are lane-local working state
+    return {"k": (None, None, "act_kv_heads", None),
+            "v": (None, None, "act_kv_heads", None),
+            "len": ("batch",), "pt": ("batch", None)}
 
 
 # -- MLPs ----------------------------------------------------------------------

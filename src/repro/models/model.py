@@ -63,6 +63,7 @@ class ModelConfig:
     # fp8 halves decode's dominant memory term — the CrossStack low-bit-cell
     # argument applied to the cache (§Perf)
     tie_embeddings: bool = False
+    paged_kernel: bool = False     # paged decode via the Pallas kernel
     backend: str = "digital"       # "digital" | "crossbar" (weight-resident)
     xbar: EngineConfig = EngineConfig(mode="deepnet")  # crossbar-backend cfg
 
@@ -77,7 +78,8 @@ class ModelConfig:
             head_dim=self.head_dim, qk_norm=self.qk_norm,
             rope_theta=self.rope_theta, kv_repeat=self.kv_repeat,
             mrope=(self.family == "vlm"), q_chunk=self.q_chunk,
-            chunk_unroll=self.chunk_unroll)
+            chunk_unroll=self.chunk_unroll,
+            paged_kernel=self.paged_kernel)
 
     @property
     def moe(self) -> Optional[MoEConfig]:
@@ -127,6 +129,9 @@ class Model:
     init_cache: Any
     cache_specs: Any
     executor: Optional[CrossbarExecutor] = None  # crossbar backend only
+    # paged-KV serving (transformer decoder families; None elsewhere)
+    init_paged_cache: Any = None
+    paged_cache_specs: Any = None
 
 
 # ---------------------------------------------------------------------------
@@ -266,6 +271,27 @@ def _build_transformer(cfg: ModelConfig) -> Model:
             out["cross_kv"] = {"k": kv_spec, "v": kv_spec}
         return out
 
+    def init_paged_cache(batch: int, max_len: int, n_pages: int,
+                         page_size: int):
+        """Paged KV cache: physical page pools + per-row page tables,
+        stacked across layers like ``init_cache``.  The table is
+        replicated per layer so the one cache pytree flows through
+        ``stack_apply`` (scan and unrolled) unchanged."""
+        if cfg.family == "encdec":
+            raise ValueError("paged KV serving targets decoder-only "
+                             "families (no cross-attention cache)")
+        one = L.paged_init_cache(bc.attn, batch, max_len, n_pages,
+                                 page_size, dtype=cfg.kv_dtype or cfg.dtype)
+        caches = {k: jnp.zeros((cfg.n_layers,) + v.shape, v.dtype)
+                  for k, v in one.items()}
+        return {"layers": caches}
+
+    def paged_cache_specs():
+        cs = L.paged_cache_specs(bc.attn)
+        return {"layers": jax.tree.map(
+            lambda names: ("layers",) + names, cs,
+            is_leaf=lambda x: type(x) is tuple)}
+
     def prefill(params, batch, cache):
         """Prefill the KV cache with a full prompt; returns last logits.
 
@@ -292,11 +318,12 @@ def _build_transformer(cfg: ModelConfig) -> Model:
     def decode_step(params, tokens, cache):
         x = T.embed(params["embed"], tokens).astype(cfg.dtype)
         offset = cache["layers"]["len"][0]
+        sq = tokens.shape[1]
         if cfg.family == "vlm":
-            pos1 = offset[:, None] + jnp.zeros((1, 1), jnp.int32)
+            pos1 = offset[:, None] + jnp.arange(sq, dtype=jnp.int32)[None]
             pos = jnp.broadcast_to(pos1[..., None], pos1.shape + (3,))
         else:
-            pos = jnp.broadcast_to(offset[:, None], tokens.shape)
+            pos = offset[:, None] + jnp.arange(sq, dtype=jnp.int32)[None]
         ckv = cache.get("cross_kv")
         cross_kv = (ckv["k"], ckv["v"]) if ckv is not None else None
         h, new_layers, _ = _trunk(params, x, pos, caches=cache["layers"],
@@ -325,7 +352,8 @@ def _build_transformer(cfg: ModelConfig) -> Model:
 
     return Model(cfg, init, param_specs, loss_fn, _on_crossbar(prefill),
                  _on_crossbar(decode_step), init_cache, cache_specs,
-                 executor=executor)
+                 executor=executor, init_paged_cache=init_paged_cache,
+                 paged_cache_specs=paged_cache_specs)
 
 
 # ---------------------------------------------------------------------------

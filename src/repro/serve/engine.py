@@ -1,9 +1,19 @@
-"""Batched serving runtime: prefill/decode step builders + a simple
-continuous-batching scheduler for the examples.
+"""Batched serving runtime: prefill/decode step builders + a paged
+continuous-batching scheduler.
 
 serve_step contract (what the dry-run lowers for decode cells): one new
 token for every sequence in the batch against a seq_len-deep KV cache,
 cache donated, greedy or temperature sampling on-device.
+
+The scheduler serves every tenant through exactly ONE compiled closure:
+a fixed (slots, chunk)-window step with per-row valid counts.  Newly
+admitted prompts join the running batch as prefill *chunks* — rows mid
+prompt consume ``chunk`` tokens per step, decoding rows consume one —
+so admission never stalls an in-flight decode step and there is no
+per-prompt-length jit cache to explode (the old padded-bucket prefill
+machinery is gone).  KV storage is a block-paged pool per lane
+(serve/kv_pool.py): fixed-size pages, per-slot page tables, free-list
+allocation at admission and reclaim at completion.
 """
 from __future__ import annotations
 
@@ -13,10 +23,12 @@ from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import obs
 from repro.models.model import Model
 from repro.serve.hotswap import HotSwapper, overlap_report
+from repro.serve.kv_pool import PagedKVPool, default_pool_pages
 
 
 def make_prefill_step(model: Model):
@@ -76,38 +88,38 @@ class Request:
     model_id: str = "A"        # tenant whose checkpoint serves this request
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # chunked-prefill progress: prompt tokens already fed to the window
+    # closure (scheduler-owned; the first token emits once fed == len)
+    fed: int = 0
+    # pages the pool allocated at admission (None on the dense path)
+    bucket: Optional[int] = None
     # lifecycle timestamps (scheduler tracer clock), filled in by the
     # scheduler when telemetry is on; the span set recorded at completion
     # telescopes exactly: queue_wait [t_submit, t_admit] + prefill
     # [t_admit, t_first] + decode [t_first, t_done] = request wall time
-    bucket: Optional[int] = None
     t_submit: Optional[float] = None
     t_admit: Optional[float] = None
     t_first: Optional[float] = None
     t_done: Optional[float] = None
 
 
-def _prompt_bucket(m: int, max_len: int) -> int:
-    """Padded prefill length for an ``m``-token prompt slice: the next
-    power of two (>= 8), capped at the cache depth — the jit cache key,
-    so admissions re-trace per *bucket*, not per prompt length."""
-    bucket = 8 if m <= 8 else 1 << (m - 1).bit_length()
-    return min(bucket, max_len)
-
-
 @dataclasses.dataclass
 class _Lane:
     """One tenant's serving state: a fixed slot batch against one plane
-    set, with its own jitted decode closure (the tiles it traced are that
+    set, with its own jitted window closure (the tiles it traced are that
     tenant's planes — trace constants, like params sharding)."""
     tenant: str
     params: Any
     slots: List[Optional[Request]]
     cache: Any
-    tokens: jax.Array
     queue: List[Request]
     decode: Callable
-    # QoS: this lane's share of the slot budget and its admission weight
+    # paged-KV page allocator (None on the dense fallback path)
+    pool: Optional[PagedKVPool] = None
+    # compiled batch width (fixed at construction: the closure's shape)
+    width: int = 0
+    # QoS: this lane's *effective* slot quota (admission cap <= width,
+    # re-split by set_weights) and its admission weight
     n_slots: int = 0
     weight: float = 1.0
     # served-token accounting (admission + decode tokens), the quantity
@@ -124,12 +136,12 @@ class _Lane:
 
 
 def _split_slots(n_slots: int, weights: Dict[str, float]) -> Dict[str, int]:
-    """QoS-weighted slot allocation across tenant lanes.
+    """QoS-weighted budget split across tenant lanes (slots OR pages).
 
-    The slot budget is ``n_slots`` per tenant (so equal weights reproduce
+    The budget is ``n_slots`` per tenant (so equal weights reproduce
     the historical even split exactly); quotas are proportional to weight
     with largest-remainder rounding, and a starvation guard pins every
-    tenant at >= 1 slot — a resident tenant with queued work always
+    tenant at >= 1 unit — a resident tenant with queued work always
     decodes, however small its weight.
     """
     total = n_slots * len(weights)
@@ -157,36 +169,65 @@ def _split_slots(n_slots: int, weights: Dict[str, float]) -> Dict[str, int]:
 
 
 class BatchScheduler:
-    """Minimal continuous-batching scheduler (slot-based, multi-tenant).
+    """Paged continuous-batching scheduler (ragged, multi-tenant).
 
-    Maintains a fixed decode batch per tenant (the QoS-weighted slot
-    quota); free slots are refilled from that tenant's queue by batched
-    admission prefills, which keeps the decode step shape static — the
-    property the dry-run cells exercise.  Same-bucket queued prompts
-    coalesce into ONE batched prefill call per admission group; the
-    calls are jitted and cached per padded prompt-length bucket, so
-    steady-state admission is a cache hit, not a re-trace.
+    Each tenant lane runs ONE jitted window closure of fixed shape
+    ``(width, chunk)``: per step, every occupied slot contributes either
+    its next ``chunk`` prompt tokens (admission prefill, emitting its
+    first token on the final chunk) or one generated token (decode) —
+    the per-row valid count ``m`` pins each row's cache fill marker, and
+    pad positions are causally masked so the streams are bit-exact with
+    an unpadded per-request reference.  Because the compiled shape never
+    depends on prompt length, a mixed-length stream costs exactly one
+    trace per tenant (the ``serve_jit_retraces_total`` counter pins this
+    at runtime) and admissions never stall an in-flight decode step —
+    admission is pure host bookkeeping (slot + page-table assignment).
+
+    KV storage defaults to a block-paged pool per lane (``kv="paged"``):
+    pages of ``page_size`` tokens, per-slot page tables, free-list
+    allocation at admission and reclaim at completion
+    (serve/kv_pool.py).  ``kv="dense"`` keeps the per-slot dense cache —
+    same closure, same streams (the bit-exactness oracle the paged
+    bench gates against).
 
     Passing ``tenants={"A": params_a, "B": params_b, ...}`` multiplexes
     up to ``stack_planes`` checkpoints from the plane bank of ONE
     crossbar executor: each tenant gets its own slot partition, cache,
-    and jitted decode closure (traced under ``executor.read_tenant(t)``
+    pool, and jitted closure (traced under ``executor.read_tenant(t)``
     so the closure's trace constants are that tenant's planes), and
     every ``step`` interleaves all token streams.  Requests route by
     ``Request.model_id``.
 
     A tenant value may also be a ``(params, weight)`` pair: QoS weights
-    drive the slot split (``_split_slots``: proportional quota with a
-    >=1 starvation guard) and the admission order across lanes
-    (heavier lanes admit first each step).  Bare params mean weight 1.0,
-    which reproduces the historical even split exactly.
+    drive the slot AND page budgets (``_split_slots``: proportional
+    quota with a >=1 starvation guard) and the admission order across
+    lanes (heavier lanes admit first each step).  Bare params mean
+    weight 1.0, which reproduces the historical even split exactly.
+    ``set_weights`` re-splits both budgets live at a step boundary.
     """
 
     def __init__(self, model: Model, params, n_slots: int, max_len: int,
                  tenants: Optional[Dict[str, Any]] = None,
-                 mode_policy=None, telemetry: bool = True):
+                 mode_policy=None, telemetry: bool = True,
+                 kv: str = "paged", page_size: int = 8,
+                 kv_pages: Optional[int] = None, chunk: int = 4):
+        if kv not in ("paged", "dense"):
+            raise ValueError(f"kv must be 'paged' or 'dense', got {kv!r}")
+        if kv == "paged" and model.init_paged_cache is None:
+            raise ValueError(
+                f"model family {model.cfg.family!r} has no paged cache; "
+                f"pass kv='dense' (the scheduler targets decoder LMs)")
+        if kv == "paged" and max_len % page_size:
+            raise ValueError(f"page_size {page_size} must divide max_len "
+                             f"{max_len}")
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
         self.model = model
         self.n_slots, self.max_len = n_slots, max_len
+        self.kv, self.page_size, self.chunk = kv, page_size, int(chunk)
+        self.kv_pages = kv_pages
+        self.pages_per_seq = (max_len // page_size if kv == "paged"
+                              else 0)
         self.mode_policy = mode_policy
         # per-scheduler telemetry: request lifecycle, token latency, QoS
         # shares, modeled device time/energy.  Scoped per instance so
@@ -226,29 +267,28 @@ class BatchScheduler:
                 "(ModelConfig(backend='crossbar'))")
         if executor is not None:
             # crossbar backend: program each tenant's weights onto its
-            # plane set ONCE at scheduler construction — the jitted decode
-            # closures below trace against already-programmed tiles
-            # (program-at-load, read-at-inference).  mode_policy decides
-            # each weight's plane layout here, at program time; the
-            # decode closures then dispatch per weight with no extra
-            # traces (expansion-fused reads are leak-free constants,
-            # deep-net reads keep the traced leak operand)
+            # plane set ONCE at scheduler construction — the jitted
+            # window closures below trace against already-programmed
+            # tiles (program-at-load, read-at-inference).  mode_policy
+            # decides each weight's plane layout here, at program time;
+            # the closures then dispatch per weight with no extra traces
+            # (expansion-fused reads are leak-free constants, deep-net
+            # reads keep the traced leak operand)
             for t in sorted(tenant_params):
                 with executor.read_tenant(t):
                     executor.ensure_programmed(tenant_params[t],
                                                mode_policy=mode_policy)
         self._slot_quota = _split_slots(n_slots, self._weights)
+        self._page_quota: Dict[str, int] = {}
+        if kv == "paged":
+            if kv_pages is None:
+                self._page_quota = {
+                    t: self._slot_quota[t] * self.pages_per_seq
+                    for t in self._weights}
+            else:
+                self._page_quota = _split_slots(kv_pages, self._weights)
         self._lanes: Dict[str, _Lane] = {
             t: self._make_lane(t, p) for t, p in sorted(tenant_params.items())}
-        # jitted admission prefill per tenant; jax's jit cache keys on the
-        # padded token shape, i.e. one trace per prompt-length bucket
-        self._prefill_fns: Dict[str, Callable] = {}
-        self._prefill_traces = 0     # bumped at trace time (tests pin it)
-        # (tenant, bucket) pairs already traced by the CURRENT prefill
-        # closures: a trace of a seen pair is a re-trace (the registry's
-        # serve_jit_retraces_total).  Cleared per tenant at promotion,
-        # where the closure legitimately rebuilds.
-        self._prefill_seen: set = set()
         self._swap: Optional[HotSwapper] = None
         self._swap_t0: Optional[float] = None
         self.swap_history: List[Dict[str, Any]] = []
@@ -266,6 +306,11 @@ class BatchScheduler:
             "serve_qos_slot_quota",
             help="decode slots the QoS-weighted split granted").set(
                 lane.n_slots, tenant=tenant)
+        if lane.pool is not None:
+            self.metrics.gauge(
+                "serve_qos_page_budget",
+                help="KV pages the QoS-weighted split granted").set(
+                    lane.pool.budget, tenant=tenant)
 
     def _account_tokens(self, lane: _Lane, n: int, kind: str) -> None:
         """Count ``n`` emitted tokens on a lane: the QoS served-token
@@ -319,12 +364,20 @@ class BatchScheduler:
     def _make_lane(self, tenant: str, params) -> _Lane:
         n = self._slot_quota.get(tenant, self.n_slots)
         ex = self.model.executor
+        pool = None
+        if self.kv == "paged":
+            n_pages = self._page_quota.get(
+                tenant, default_pool_pages(n, self.max_len, self.page_size))
+            pool = PagedKVPool(n_pages, self.page_size, self.max_len, n)
+            cache = self.model.init_paged_cache(n, self.max_len, n_pages,
+                                                self.page_size)
+        else:
+            cache = self.model.init_cache(n, self.max_len)
         return _Lane(tenant=tenant, params=params,
-                     slots=[None] * n,
-                     cache=self.model.init_cache(n, self.max_len),
-                     tokens=jnp.zeros((n, 1), jnp.int32),
+                     slots=[None] * n, cache=cache,
                      queue=[], decode=self._make_decode(tenant),
-                     n_slots=n, weight=self._weights.get(tenant, 1.0),
+                     pool=pool, width=n, n_slots=n,
+                     weight=self._weights.get(tenant, 1.0),
                      device_cost=(ex.device_token_cost(tenant)
                                   if ex is not None else None))
 
@@ -335,16 +388,27 @@ class BatchScheduler:
                       key=lambda t: (-self._lanes[t].weight, t))
 
     def _make_decode(self, tenant: str) -> Callable:
-        """Jitted decode closure ``(params, tokens, cache, leak) -> ...``.
+        """The ONE jitted closure per tenant:
+        ``(params, tokens, cache, m, leak) -> (token, cache)``.
 
-        ``leak`` is the write-plane leakage of an in-flight hot-swap as a
-        *traced* scalar: the same compiled step serves leak = 0.0 in
+        ``tokens`` is the fixed (width, chunk) window; ``m`` the per-row
+        valid counts (chunk tokens for a row mid-prompt, 1 for a
+        decoding row, 0 for an empty slot).  The cache fill marker is
+        pinned to ``old_len + m`` — pad positions past a row's count are
+        never attendable (causal + length masks hit them with exact
+        -1e30s), so the emitted token at row position ``m - 1`` is
+        bit-exact with an unpadded reference.  Because the compiled
+        shape is prompt-length independent, this closure traces exactly
+        once per tenant for ANY prompt mix.
+
+        ``leak`` is the write-plane leakage of an in-flight hot-swap as
+        a *traced* scalar: the same compiled step serves leak = 0.0 in
         steady state and the live value during an overlap window — no
         re-trace at window boundaries, and (with ``cfg.use_kernel``) the
         Pallas kernel applies it pre-ADC, so overlap decode never falls
         back to the reference scan."""
-        base = make_decode_step(self.model)
-        ex = self.model.executor
+        model = self.model
+        ex = model.executor
         n_traces = [0]
 
         def _note_trace():
@@ -357,19 +421,30 @@ class BatchScheduler:
             n_traces[0] += 1
             obs.note_jit_trace("decode", tenant, retrace=n_traces[0] > 1)
 
+        def _window(params, tokens, cache, m):
+            old = cache["layers"]["len"]                     # (L, B)
+            logits, cache = model.decode_step(params, tokens, cache)
+            layers = dict(cache["layers"])
+            layers["len"] = (old + m[None, :]).astype(old.dtype)
+            sel = jnp.take_along_axis(
+                logits, jnp.maximum(m - 1, 0)[:, None, None], axis=1)[:, 0]
+            tok = jnp.argmax(sel.astype(jnp.float32),
+                             axis=-1).astype(jnp.int32)
+            return tok, dict(cache, layers=layers)
+
         if ex is None:
-            def digital_step(params, tokens, cache):
+            def digital_step(params, tokens, cache, m):
                 _note_trace()
-                return base(params, tokens, cache)
+                return _window(params, tokens, cache, m)
 
             digital = jax.jit(digital_step, donate_argnums=(2,))
-            return lambda params, tokens, cache, leak: digital(
-                params, tokens, cache)
+            return lambda params, tokens, cache, m, leak: digital(
+                params, tokens, cache, m)
 
-        def tenant_step(params, tokens, cache, leak):
+        def tenant_step(params, tokens, cache, m, leak):
             _note_trace()
             with ex.read_tenant(tenant), ex.leak_scope(leak):
-                return base(params, tokens, cache)
+                return _window(params, tokens, cache, m)
 
         return jax.jit(tenant_step, donate_argnums=(2,))
 
@@ -399,6 +474,40 @@ class BatchScheduler:
             help="requests accepted into a tenant queue").inc(
                 tenant=lane.tenant)
         lane.queue.append(req)
+
+    # -- dynamic QoS ---------------------------------------------------------
+
+    def set_weights(self, weights: Dict[str, float]) -> None:
+        """Re-weight QoS live: recompute the slot quotas and page
+        budgets at a step boundary and update the ``serve_qos_*``
+        gauges.  ``weights`` may cover any subset of resident tenants;
+        the rest keep their current weight.
+
+        Quota growth is capped at each lane's compiled width (resizing
+        the batch would force a re-trace and drop in-flight cache
+        state); shrinking takes effect as admissions — occupied slots
+        above the new quota drain naturally as requests complete.
+        Page-budget shrinks likewise only gate NEW admissions.
+        """
+        for t, w in weights.items():
+            if t not in self._lanes:
+                raise KeyError(f"no lane for tenant {t!r}: this "
+                               f"scheduler serves {self.tenants}")
+            if w <= 0:
+                raise ValueError(
+                    f"tenant {t!r} QoS weight must be > 0, got {w}")
+        self._weights.update({t: float(w) for t, w in weights.items()})
+        quota = _split_slots(self.n_slots, self._weights)
+        pquota = (_split_slots(self.kv_pages, self._weights)
+                  if (self.kv == "paged" and self.kv_pages is not None)
+                  else None)
+        for t, lane in self._lanes.items():
+            lane.weight = self._weights[t]
+            lane.n_slots = min(quota.get(t, lane.width), lane.width)
+            self._slot_quota[t] = lane.n_slots
+            if pquota is not None and lane.pool is not None:
+                lane.pool.set_budget(pquota[t])
+            self._set_qos_gauges(t, lane)
 
     # -- deep-net-mode hot-swap (serve reads while shadow planes program) ----
 
@@ -444,21 +553,10 @@ class BatchScheduler:
 
     def _apply_promotion(self, tenant: str, new_params) -> None:
         """Land promoted params on a lane: resident planes are trace
-        constants of the jitted closures, so the tenant's decode closure
-        rebuilds (one re-trace, zero dropped requests) and its cached
-        admission prefills are dropped for the same reason.  A tenant
+        constants of the jitted closure, so the tenant's window closure
+        rebuilds (one re-trace, zero dropped requests).  A tenant
         deployed live via ``begin_hot_swap(..., tenant=...)`` gets a
         fresh lane here and starts admitting."""
-        # only the swapped tenant's cached prefills go stale: its planes
-        # (trace constants) just changed.  Leakage is NOT baked into any
-        # closure — it flows as a traced argument (leak_scope) — so the
-        # other tenant's buckets stay warm across the window.
-        self._prefill_fns.pop(tenant, None)
-        # the dropped closures' bucket traces no longer count as "seen":
-        # the rebuilt prefill's first trace per bucket is expected, not
-        # a re-trace (same reasoning as the fresh decode trace counter)
-        self._prefill_seen = {k for k in self._prefill_seen
-                              if k[0] != tenant}
         lane = self._lanes.get(tenant)
         if lane is None:
             if tenant not in self._weights:
@@ -472,6 +570,14 @@ class BatchScheduler:
                 total = self.n_slots * len(self._weights)
                 wsum = sum(self._weights.values())
                 self._slot_quota[tenant] = max(1, round(total / wsum))
+                if self.kv == "paged":
+                    if self.kv_pages is None:
+                        self._page_quota[tenant] = (
+                            self._slot_quota[tenant] * self.pages_per_seq)
+                    else:
+                        ptotal = self.kv_pages * len(self._weights)
+                        self._page_quota[tenant] = max(
+                            self.pages_per_seq, round(ptotal / wsum))
             self._lanes[tenant] = self._make_lane(tenant, new_params)
         else:
             lane.params = new_params
@@ -547,57 +653,7 @@ class BatchScheduler:
             self._swap = None
             self._swap_t0 = None
 
-    # -- admission (jitted, bucketed prefill) --------------------------------
-
-    def _build_prefill(self, tenant: str) -> Callable:
-        """Jitted coalesced admission prefill (batched, one call per
-        same-bucket admission group).
-
-        Every admission batch is the lane's full slot width (unused rows
-        are zero-padded and discarded), so jax's jit cache keys only on
-        the padded bucket length — one trace per bucket, whatever the
-        group size.  Each row's first ``m_i = len_i - 1`` prompt tokens
-        prefill at the bucket length; the cache fill marker is then
-        pinned *per row* to ``m_i`` — pad positions beyond it are
-        length-masked, never attended — and one decode step on the
-        per-row last real tokens yields every admission token in one
-        call.  Bit-exact with per-slot batch-of-1 admissions (and with
-        an unpadded prefill of each full prompt): every op on the path
-        is row-independent — per-row input-quantization scales, per-row
-        cache positions and causal offsets.
-        """
-        model, max_len = self.model, self.max_len
-        ex = model.executor
-
-        def pf(params, tokens_pad, last_tok, m):
-            self._prefill_traces += 1       # trace-time only (host state)
-            key = (tenant, int(tokens_pad.shape[1]))
-            obs.note_jit_trace("prefill", tenant,
-                               retrace=key in self._prefill_seen)
-            self._prefill_seen.add(key)
-            cache = model.init_cache(tokens_pad.shape[0], max_len)
-            _, cache = model.prefill(params, {"tokens": tokens_pad}, cache)
-            layers = dict(cache["layers"])
-            layers["len"] = jnp.broadcast_to(
-                m[None, :], layers["len"].shape).astype(layers["len"].dtype)
-            logits, cache = model.decode_step(params, last_tok,
-                                              dict(cache, layers=layers))
-            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-            return tok, cache
-
-        if ex is None:
-            digital = jax.jit(pf)
-            return lambda params, tokens_pad, last_tok, m, leak: digital(
-                params, tokens_pad, last_tok, m)
-
-        def pf_tenant(params, tokens_pad, last_tok, m, leak):
-            # like decode: leak is a traced argument, so an admission
-            # inside the swap window carries the live leakage through the
-            # SAME compiled bucket that serves steady-state admissions
-            with ex.read_tenant(tenant), ex.leak_scope(leak):
-                return pf(params, tokens_pad, last_tok, m)
-
-        return jax.jit(pf_tenant)
+    # -- admission (host bookkeeping only: slots + pages) --------------------
 
     def _leak_now(self) -> jax.Array:
         """The leak scalar this step's closures should carry (see
@@ -607,136 +663,144 @@ class BatchScheduler:
         return (ex.current_leak_codes() if ex is not None
                 else jnp.float32(0.0))
 
-    def _next_bucket_group(self, lane: _Lane,
-                           n_free: int) -> List[Request]:
-        """Pop the longest FIFO prefix of the lane's queue whose members
-        share one padded prefill bucket, capped at the free slot count —
-        the unit one coalesced admission call serves."""
-        head = lane.queue[0]
-        m0 = int(head.prompt.shape[0]) - 1
-        if m0 >= self.max_len:
-            # the last real token's K/V lands at position m: the prompt
-            # must fit strictly inside the cache depth or the write (and
-            # every token after it) silently falls off the end
-            raise ValueError(f"prompt length {m0 + 1} exceeds the "
-                             f"scheduler's max_len {self.max_len}")
-        bucket = _prompt_bucket(m0, self.max_len)
-        group = [lane.queue.pop(0)]
-        while lane.queue and len(group) < n_free:
-            m = int(lane.queue[0].prompt.shape[0]) - 1
-            if (m >= self.max_len
-                    or _prompt_bucket(m, self.max_len) != bucket):
-                break
-            group.append(lane.queue.pop(0))
-        return group
+    def _admit(self, lane: _Lane) -> None:
+        """Move queued requests into free slots.
 
-    def _prefill_group(self, lane: _Lane, group: List[Request]):
-        """One batched prefill call for a same-bucket admission group
-        (batch = the lane's slot width; rows past the group are dummies)."""
-        fn = self._prefill_fns.get(lane.tenant)
-        if fn is None:
-            fn = self._prefill_fns[lane.tenant] = self._build_prefill(
-                lane.tenant)
-        bucket = _prompt_bucket(int(group[0].prompt.shape[0]) - 1,
-                                self.max_len)
-        t_admit = self.tracer.now()
-        for req in group:
-            req.t_admit = t_admit
-            req.bucket = bucket
-        b = lane.n_slots
-        tokens_pad = jnp.zeros((b, bucket), jnp.int32)
-        last = jnp.zeros((b, 1), jnp.int32)
-        ms = [0] * b
-        for j, req in enumerate(group):
-            m = int(req.prompt.shape[0]) - 1
-            if m:
-                tokens_pad = tokens_pad.at[j, :m].set(req.prompt[:m])
-            last = last.at[j, 0].set(req.prompt[-1])
-            ms[j] = m
-        return fn(lane.params, tokens_pad, last,
-                  jnp.asarray(ms, jnp.int32), self._leak_now())
-
-    def _admit(self, lane: _Lane, finished: List[Request]) -> None:
+        Pure host bookkeeping — a slot index, a page-table row, a
+        zeroed fill marker — so admission can NEVER stall an in-flight
+        decode step; the admitted prompt streams into the running batch
+        as prefill chunks on subsequent :meth:`step` calls.  When the
+        page pool (or the QoS page budget) cannot cover a request's
+        whole lifetime (``min(prompt + max_new - 1, max_len)`` tokens,
+        claimed up front so an admitted request can never deadlock
+        mid-decode), the request simply waits in FIFO order — queued,
+        never dropped.
+        """
         while lane.queue:
+            active = sum(s is not None for s in lane.slots)
+            if active >= lane.n_slots:
+                return
             free = [i for i, s in enumerate(lane.slots) if s is None]
             if not free:
                 return
-            group = self._next_bucket_group(lane, len(free))
-            toks, cache_b = self._prefill_group(lane, group)
-            for j, req in enumerate(group):
-                req.out.append(int(toks[j]))
-                req.t_first = self.tracer.now()
-                self._account_tokens(lane, 1, "admission")
-                if self.metrics.enabled and req.t_submit is not None:
-                    self.metrics.histogram(
-                        "serve_queue_wait_seconds",
-                        help="submit-to-admission wait").observe(
-                        req.t_admit - req.t_submit, tenant=lane.tenant)
-                    self.metrics.histogram(
-                        "serve_ttft_seconds",
-                        help="submit to first emitted token").observe(
-                        req.t_first - req.t_submit, tenant=lane.tenant)
-                if len(req.out) >= req.max_new:
-                    # the admission token already met the budget: finish
-                    # here and keep the slot free for the next request —
-                    # no decode step burned, no extra token emitted
-                    req.t_done = req.t_first
-                    self._finish_request(lane, req)
-                    finished.append(req)
-                    continue
-                slot = free.pop(0)
-                # transformer-family caches are (L, B, ...): batch axis 1.
-                # (The scheduler targets decoder LMs; stateful families
-                # use greedy_generate / custom loops.)
-                lane.cache = jax.tree.map(
-                    lambda full, newc, j=j, slot=slot:
-                    jax.lax.dynamic_update_slice_in_dim(
-                        full,
-                        jax.lax.dynamic_slice_in_dim(
-                            newc, j, 1, axis=1).astype(full.dtype),
-                        slot, axis=1),
-                    lane.cache, cache_b)
-                lane.tokens = lane.tokens.at[slot, 0].set(toks[j])
-                lane.slots[slot] = req
+            req = lane.queue[0]
+            plen = int(req.prompt.shape[0])
+            if plen - 1 >= self.max_len:
+                # the last real token's K/V lands at position plen - 1:
+                # the prompt must fit strictly inside the cache depth or
+                # the write (and every token after it) silently falls
+                # off the end
+                raise ValueError(f"prompt length {plen} exceeds the "
+                                 f"scheduler's max_len {self.max_len}")
+            row = free[0]
+            layers = dict(lane.cache["layers"])
+            if lane.pool is not None:
+                need = min(plen + req.max_new - 1, self.max_len)
+                if not lane.pool.can_alloc(need):
+                    return                    # backpressure: wait, FIFO
+                pages = lane.pool.alloc(row, need)
+                req.bucket = len(pages)
+                tab = jnp.asarray(lane.pool.table_row(row))
+                layers["pt"] = layers["pt"].at[:, row].set(tab[None])
+            layers["len"] = layers["len"].at[:, row].set(0)
+            lane.cache = dict(lane.cache, layers=layers)
+            lane.queue.pop(0)
+            req.fed = 0
+            req.t_admit = self.tracer.now()
+            if self.metrics.enabled and req.t_submit is not None:
+                self.metrics.histogram(
+                    "serve_queue_wait_seconds",
+                    help="submit-to-admission wait").observe(
+                    req.t_admit - req.t_submit, tenant=lane.tenant)
+            lane.slots[row] = req
+
+    def _release_slot(self, lane: _Lane, row: int) -> None:
+        """Return a completed slot: reclaim its pages and null its
+        table row so stale writes land on the null page, never on a
+        page the free list may hand to the next admission."""
+        lane.slots[row] = None
+        layers = dict(lane.cache["layers"])
+        if lane.pool is not None:
+            lane.pool.free_row(row)
+            layers["pt"] = layers["pt"].at[:, row].set(0)
+        layers["len"] = layers["len"].at[:, row].set(0)
+        lane.cache = dict(lane.cache, layers=layers)
 
     def step(self) -> List[Request]:
-        """One decode step for every tenant's active slots; returns
+        """One window step for every tenant's active slots; returns
         finished requests (across tenants).
 
         An in-flight hot-swap advances first — plane chunks program
         strictly between decode steps, and promotion happens here at the
         boundary, so every decode call reads one consistent plane set.
         A lane whose planes are the write target stays paused for the
-        window; the other tenant's lane decodes through it."""
+        window; the other tenant's lane decodes through it.
+
+        Each occupied row contributes its next prompt chunk (mid
+        prefill; emits its first token when the prompt drains) or its
+        last generated token (decode, ``m = 1``).  Empty rows ride along
+        at ``m = 0``.  One fixed-shape call serves them all.
+        """
         self._advance_swap()
         finished: List[Request] = []
         decoded = False
         leak = self._leak_now()
+        c = self.chunk
         for t in self._lane_order():
             lane = self._lanes[t]
             if lane.paused:
                 continue
-            self._admit(lane, finished)
+            self._admit(lane)
             if all(s is None for s in lane.slots):
                 continue
-            t0 = self.tracer.now()
-            lane.tokens, lane.cache = lane.decode(
-                lane.params, lane.tokens, lane.cache, leak)
-            decoded = True
-            n_emitted = 0
+            toks = np.zeros((lane.width, c), np.int32)
+            m = np.zeros((lane.width,), np.int32)
+            emit: List[Optional[str]] = [None] * lane.width
             for i, req in enumerate(lane.slots):
                 if req is None:
                     continue
-                req.out.append(int(lane.tokens[i, 0]))
-                n_emitted += 1
+                plen = int(req.prompt.shape[0])
+                if req.fed < plen:
+                    piece = np.asarray(req.prompt[req.fed:req.fed + c])
+                    toks[i, :piece.shape[0]] = piece
+                    m[i] = piece.shape[0]
+                    req.fed += int(piece.shape[0])
+                    if req.fed >= plen:
+                        emit[i] = "admission"   # final chunk: 1st token
+                else:
+                    toks[i, 0] = req.out[-1]
+                    m[i] = 1
+                    emit[i] = "decode"
+            t0 = self.tracer.now()
+            tok, lane.cache = lane.decode(
+                lane.params, jnp.asarray(toks), lane.cache,
+                jnp.asarray(m), leak)
+            decoded = True
+            tok_host = np.asarray(tok)
+            n_admit = n_dec = 0
+            for i, req in enumerate(lane.slots):
+                if req is None or emit[i] is None:
+                    continue
+                req.out.append(int(tok_host[i]))
+                if emit[i] == "admission":
+                    req.t_first = self.tracer.now()
+                    n_admit += 1
+                    if self.metrics.enabled and req.t_submit is not None:
+                        self.metrics.histogram(
+                            "serve_ttft_seconds",
+                            help="submit to first emitted token").observe(
+                            req.t_first - req.t_submit, tenant=lane.tenant)
+                else:
+                    n_dec += 1
                 if len(req.out) >= req.max_new:
                     req.t_done = self.tracer.now()
                     self._finish_request(lane, req)
                     finished.append(req)
-                    lane.slots[i] = None
-            self._account_tokens(lane, n_emitted, "decode")
-            if self.metrics.enabled and n_emitted:
-                # every slot's token materialized in this one batched
+                    self._release_slot(lane, i)
+            self._account_tokens(lane, n_admit, "admission")
+            self._account_tokens(lane, n_dec, "decode")
+            if self.metrics.enabled and (n_admit + n_dec):
+                # every emitted token materialized in this one batched
                 # step, so the per-token latency IS the step wall time —
                 # observed once per emitted token so histogram mass
                 # weights by tokens, not steps
@@ -745,11 +809,20 @@ class BatchScheduler:
                     "serve_token_latency_seconds",
                     help="wall time of the decode step that produced "
                          "each token")
-                for _ in range(n_emitted):
+                for _ in range(n_admit + n_dec):
                     h.observe(dt, tenant=lane.tenant)
         if decoded and self._swap is not None:
             self._swap.note_decode_step()
         return finished
+
+    def kv_report(self) -> Dict[str, Dict[str, Any]]:
+        """Per-tenant page-pool accounting (paged lanes only): sizes,
+        live usage, QoS budget, and the conservation invariant
+        ``pages_in_use + pages_free == n_pages`` — the paged bench's
+        exit gate reads this."""
+        return {t: lane.pool.report()
+                for t, lane in sorted(self._lanes.items())
+                if lane.pool is not None}
 
     def mode_report(self, tenant: Optional[str] = None) -> Dict[str, Any]:
         """Per-weight read-mode choices and their IR-drop economics for
@@ -804,8 +877,9 @@ class BatchScheduler:
     def qos_report(self) -> Dict[str, Dict[str, Any]]:
         """Per-tenant QoS accounting in ``swap_history`` style: the
         configured weight, the slot quota the weighted split granted,
-        and the served-token count/share so far (admission + decode
-        tokens) — the figure the weights are supposed to shift.
+        the page budget/usage (paged lanes), and the served-token
+        count/share so far (admission + decode tokens) — the figure the
+        weights are supposed to shift.
 
         A view over the scheduler registry when telemetry is on
         (``serve_qos_*`` gauges + ``serve_tokens_total``); the lane
@@ -819,8 +893,15 @@ class BatchScheduler:
             served = {t: lane.tokens_served
                       for t, lane in self._lanes.items()}
         total = sum(served.values())
-        return {t: {"weight": lane.weight,
-                    "slots": lane.n_slots,
-                    "tokens_served": served[t],
-                    "token_share": (served[t] / total if total else 0.0)}
-                for t, lane in sorted(self._lanes.items())}
+        out = {}
+        for t, lane in sorted(self._lanes.items()):
+            entry: Dict[str, Any] = {
+                "weight": lane.weight,
+                "slots": lane.n_slots,
+                "tokens_served": served[t],
+                "token_share": (served[t] / total if total else 0.0)}
+            if lane.pool is not None:
+                entry["page_budget"] = lane.pool.budget
+                entry["pages_in_use"] = lane.pool.pages_in_use
+            out[t] = entry
+        return out

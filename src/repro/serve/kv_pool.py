@@ -1,0 +1,143 @@
+"""Block-paged KV pool: the host-side page allocator behind paged serving.
+
+One pool backs one tenant lane.  Physical pages live in the lane's cache
+arrays as ``(n_pages + 1, page_size, kv_heads, head_dim)`` — index 0 is a
+reserved **null page** that is never allocated: unwritten page-table
+entries point at it, so pad/out-of-range scatter writes land there
+harmlessly and gathers through an unallocated entry read zeros that the
+length mask excludes exactly.
+
+Allocation is whole-lifetime: a request's full page need
+(``ceil(min(prompt_len + max_new - 1, max_len) / page_size)``) is claimed
+from the free list at admission and reclaimed in one shot at completion.
+That keeps the conservation invariant trivial and exact at every step:
+
+    pages_in_use + pages_free == n_pages
+
+``budget`` is the QoS view of the same pool: a logical cap (<= the
+physical ``n_pages``) that ``BatchScheduler.set_weights`` re-splits at
+step boundaries.  Shrinking the budget below current usage only blocks
+new admissions; resident pages drain as requests complete.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+NULL_PAGE = 0
+
+
+class PagedKVPool:
+    """Free-list page allocator with per-row (per-slot) page tables."""
+
+    def __init__(self, n_pages: int, page_size: int, max_len: int,
+                 n_rows: int):
+        if page_size <= 0:
+            raise ValueError(f"page_size must be > 0, got {page_size}")
+        if max_len % page_size:
+            raise ValueError(
+                f"page_size {page_size} must divide max_len {max_len}: the "
+                f"gathered logical view must be exactly max_len wide for "
+                f"bit-exactness with the dense cache path")
+        if n_pages < 1:
+            raise ValueError(f"pool needs >= 1 page, got {n_pages}")
+        self.page_size = page_size
+        self.max_len = max_len
+        self.n_rows = n_rows
+        self.n_pages = n_pages
+        self.pages_per_seq = max_len // page_size
+        self._budget = n_pages
+        # physical ids n_pages..1 so pop() hands out low ids first;
+        # id 0 is the null page and never enters the free list
+        self._free: List[int] = list(range(n_pages, 0, -1))
+        self._rows: List[List[int]] = [[] for _ in range(n_rows)]
+
+    # -- sizing ---------------------------------------------------------------
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages covering ``n_tokens`` cache positions (>= 1)."""
+        return max(1, -(-min(n_tokens, self.max_len) // self.page_size))
+
+    @property
+    def pages_in_use(self) -> int:
+        return sum(len(r) for r in self._rows)
+
+    @property
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def budget(self) -> int:
+        return self._budget
+
+    def set_budget(self, n: int) -> None:
+        """Re-cap the QoS budget (clamped to [1, n_pages])."""
+        self._budget = max(1, min(int(n), self.n_pages))
+
+    def conservation_ok(self) -> bool:
+        """The exit-gate invariant: every page is either owned or free."""
+        return self.pages_in_use + self.pages_free == self.n_pages
+
+    # -- alloc / free ---------------------------------------------------------
+
+    def can_alloc(self, n_tokens: int) -> bool:
+        need = self.pages_for(n_tokens)
+        return (need <= self.pages_free
+                and self.pages_in_use + need <= self._budget)
+
+    def alloc(self, row: int, n_tokens: int) -> List[int]:
+        """Claim all pages for a sequence of ``n_tokens`` onto ``row``.
+
+        Returns the physical page ids (logical order).  Raises if the row
+        already owns pages or the pool/budget cannot satisfy the request —
+        callers gate on :meth:`can_alloc` (admission backpressure; the
+        scheduler queues rather than drops).
+        """
+        if self._rows[row]:
+            raise RuntimeError(f"row {row} already owns pages "
+                               f"{self._rows[row]}")
+        if not self.can_alloc(n_tokens):
+            raise RuntimeError(
+                f"pool cannot allocate {self.pages_for(n_tokens)} pages "
+                f"(free={self.pages_free}, in_use={self.pages_in_use}, "
+                f"budget={self._budget})")
+        pages = [self._free.pop() for _ in range(self.pages_for(n_tokens))]
+        self._rows[row] = pages
+        return pages
+
+    def free_row(self, row: int) -> List[int]:
+        """Reclaim a completed row's pages back onto the free list."""
+        pages = self._rows[row]
+        self._rows[row] = []
+        self._free.extend(reversed(pages))
+        return pages
+
+    # -- table views ----------------------------------------------------------
+
+    def table_row(self, row: int) -> np.ndarray:
+        """(pages_per_seq,) int32 physical ids; NULL_PAGE past the end."""
+        out = np.full((self.pages_per_seq,), NULL_PAGE, np.int32)
+        pages = self._rows[row]
+        out[:len(pages)] = pages
+        return out
+
+    def table(self) -> np.ndarray:
+        """(n_rows, pages_per_seq) int32 page table for the whole lane."""
+        return np.stack([self.table_row(r) for r in range(self.n_rows)])
+
+    def report(self) -> dict:
+        return {"n_pages": self.n_pages, "page_size": self.page_size,
+                "pages_per_seq": self.pages_per_seq,
+                "pages_in_use": self.pages_in_use,
+                "pages_free": self.pages_free, "budget": self._budget,
+                "conservation_ok": self.conservation_ok()}
+
+
+def default_pool_pages(n_rows: int, max_len: int, page_size: int,
+                       kv_pages: Optional[int] = None) -> int:
+    """Pool sizing: ``kv_pages`` when the operator set one, else enough
+    for every row to hold a full-depth sequence (never blocks)."""
+    if kv_pages is not None:
+        return kv_pages
+    return n_rows * (max_len // page_size)

@@ -1,0 +1,122 @@
+"""Paged KV pool unit behaviour: free-list allocation, reclaim, the
+null-page convention, QoS budgets, and the conservation invariant the
+paged bench's exit gate enforces."""
+import pytest
+
+from repro.serve.kv_pool import NULL_PAGE, PagedKVPool, default_pool_pages
+
+
+def _pool(n_pages=8, page_size=4, max_len=16, n_rows=3):
+    return PagedKVPool(n_pages, page_size, max_len, n_rows)
+
+
+def test_page_size_must_divide_max_len():
+    """Bit-exactness requires the gathered paged view to be EXACTLY the
+    dense path's max_len wide — a ragged last page would change the
+    attention einsum width."""
+    with pytest.raises(ValueError, match="divide"):
+        PagedKVPool(8, page_size=5, max_len=16, n_rows=2)
+
+
+def test_null_page_is_reserved_and_never_allocated():
+    pool = _pool(n_pages=12)
+    seen = set()
+    for row in range(3):
+        seen.update(pool.alloc(row, 16))
+    assert NULL_PAGE not in seen
+    assert len(seen) == 12        # 3 rows x 4 pages, all distinct
+
+
+def test_pages_for_rounds_up_and_clamps_to_max_len():
+    pool = _pool(page_size=4, max_len=16)
+    assert pool.pages_for(1) == 1
+    assert pool.pages_for(4) == 1
+    assert pool.pages_for(5) == 2
+    assert pool.pages_for(16) == 4
+    assert pool.pages_for(99) == 4     # lifetime never exceeds max_len
+    assert pool.pages_for(0) == 1      # a resident row owns >= 1 page
+
+
+def test_alloc_reclaim_conserves_pages():
+    pool = _pool(n_pages=8)
+    assert pool.pages_free == 8 and pool.conservation_ok()
+    a = pool.alloc(0, 9)               # 3 pages
+    assert len(a) == 3
+    assert pool.pages_in_use == 3 and pool.pages_free == 5
+    assert pool.conservation_ok()
+    b = pool.alloc(1, 16)              # 4 pages
+    assert pool.pages_in_use == 7
+    pool.free_row(0)
+    assert pool.pages_in_use == 4 and pool.pages_free == 4
+    assert pool.conservation_ok()
+    # freed pages are reusable and stay distinct from row 1's
+    c = pool.alloc(2, 16)
+    assert not (set(c) & set(b))
+    assert pool.conservation_ok()
+
+
+def test_double_alloc_on_occupied_row_raises():
+    pool = _pool()
+    pool.alloc(0, 4)
+    with pytest.raises(RuntimeError, match="already owns"):
+        pool.alloc(0, 4)
+
+
+def test_alloc_beyond_free_pages_raises_and_can_alloc_predicts_it():
+    pool = _pool(n_pages=4, page_size=4, max_len=16, n_rows=3)
+    pool.alloc(0, 16)                   # all 4 pages
+    assert not pool.can_alloc(1)
+    with pytest.raises(RuntimeError):
+        pool.alloc(1, 1)
+    pool.free_row(0)
+    assert pool.can_alloc(16)
+
+
+def test_budget_gates_new_allocations_only():
+    """A QoS page budget below current usage must not evict live pages —
+    it only refuses NEW admissions until usage drains under it."""
+    pool = _pool(n_pages=8)
+    pool.alloc(0, 16)                   # 4 pages in use
+    pool.set_budget(2)
+    assert pool.budget == 2
+    assert pool.pages_in_use == 4       # live pages untouched
+    assert not pool.can_alloc(1)        # in_use already >= budget
+    pool.free_row(0)
+    assert pool.can_alloc(8)            # 2 pages fit the budget again
+    assert not pool.can_alloc(9)        # 3 pages would exceed it
+
+
+def test_budget_clamps_to_pool_bounds():
+    pool = _pool(n_pages=8)
+    pool.set_budget(0)
+    assert pool.budget == 1             # starvation guard
+    pool.set_budget(99)
+    assert pool.budget == 8             # physical pool is the ceiling
+
+
+def test_table_row_pads_with_null_page():
+    pool = _pool(n_pages=8, page_size=4, max_len=16)
+    pages = pool.alloc(1, 6)            # 2 of 4 table entries
+    row = pool.table_row(1)
+    assert row.shape == (4,)
+    assert list(row[:2]) == pages
+    assert all(p == NULL_PAGE for p in row[2:])
+    # unallocated rows are all null
+    assert all(p == NULL_PAGE for p in pool.table_row(0))
+    tab = pool.table()
+    assert tab.shape == (3, 4)
+    assert list(tab[1]) == list(row)
+
+
+def test_report_fields():
+    pool = _pool(n_pages=8, page_size=4, max_len=16)
+    pool.alloc(0, 5)
+    rep = pool.report()
+    assert rep["n_pages"] == 8 and rep["page_size"] == 4
+    assert rep["pages_in_use"] == 2 and rep["pages_free"] == 6
+    assert rep["conservation_ok"] is True
+
+
+def test_default_pool_pages():
+    assert default_pool_pages(4, 32, 8) == 16          # 4 rows x 4 pages
+    assert default_pool_pages(4, 32, 8, kv_pages=10) == 10

@@ -232,10 +232,11 @@ def test_retrace_counter_increments_on_forced_retrace():
     reg = obs.registry()
     before = reg.total("serve_jit_retraces_total", closure="decode")
     lane = sched._lanes["A"]
-    # batch-of-1 call against the slot-width-traced closure: new shape,
-    # same built closure -> jit re-traces it
-    lane.decode(lane.params, jnp.zeros((1, 1), jnp.int32),
-                model.init_cache(1, 24), jnp.float32(0.0))
+    # batch-of-1 call against the width-traced window closure: new
+    # shape, same built closure -> jit re-traces it
+    lane.decode(lane.params, jnp.zeros((1, sched.chunk), jnp.int32),
+                model.init_cache(1, 24), jnp.ones((1,), jnp.int32),
+                jnp.float32(0.0))
     after = reg.total("serve_jit_retraces_total", closure="decode")
     assert after == before + 1
 

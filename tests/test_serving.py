@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro import obs
 from repro.configs import get_config
 from repro.models.model import build_model
 from repro.serve.engine import (BatchScheduler, Request, greedy_generate,
@@ -89,14 +90,15 @@ def test_admission_rejects_prompt_longer_than_max_len():
 
 
 def test_max_new_token_counts_are_exact():
-    """Regression: a request must emit EXACTLY max_new tokens.  The old
-    scheduler appended the admission (prefill) token without checking
-    completion, so max_new=1 emitted 2 tokens and burned a decode step."""
+    """Regression: a request must emit EXACTLY max_new tokens — the
+    first on the step that feeds its final prompt chunk, one per decode
+    step after — so a request costs ceil(plen / chunk) + max_new - 1
+    steps, never an extra decode step past its budget."""
     cfg, m, params = _model()
     p = jax.random.randint(jax.random.PRNGKey(3), (6,), 0,
                            cfg.vocab - 1).astype(jnp.int32)
     for max_new in (1, 2, 3):
-        sched = BatchScheduler(m, params, n_slots=2, max_len=32)
+        sched = BatchScheduler(m, params, n_slots=2, max_len=32, chunk=4)
         sched.submit(Request(rid=0, prompt=p, max_new=max_new))
         done, steps = [], 0
         while not done and steps < 20:
@@ -105,29 +107,33 @@ def test_max_new_token_counts_are_exact():
         assert len(done) == 1
         assert len(done[0].out) == max_new          # pinned, not >=
         assert done[0].done
-        # max_new=1 finishes at admission: no decode step burned
-        if max_new == 1:
-            assert steps == 1
+        # plen=6 at chunk=4 prefills in 2 steps (the 2nd emits token 1)
+        assert steps == 2 + (max_new - 1)
 
 
-def test_max_new_1_requests_drain_through_free_slots_in_one_step():
-    """Admission-finished requests never occupy a slot, so a queue of
-    max_new=1 requests drains through 2 slots in a single step."""
+def test_completion_frees_slots_for_next_step_admission():
+    """A request finishing on step N releases its slot (and pages)
+    within that step, so a queue of short requests drains through 2
+    slots at full occupancy: 3 one-chunk max_new=1 requests need
+    exactly 2 steps, never a stall step between waves."""
     cfg, m, params = _model()
-    sched = BatchScheduler(m, params, n_slots=2, max_len=32)
+    sched = BatchScheduler(m, params, n_slots=2, max_len=32, chunk=4)
     for rid in range(3):
         p = jax.random.randint(jax.random.PRNGKey(rid), (4,), 0,
                                cfg.vocab - 1).astype(jnp.int32)
         sched.submit(Request(rid=rid, prompt=p, max_new=1))
-    done = sched.step()
-    assert sorted(r.rid for r in done) == [0, 1, 2]
-    assert all(len(r.out) == 1 for r in done)
+    first = sched.step()
+    assert sorted(r.rid for r in first) == [0, 1]
+    second = sched.step()
+    assert [r.rid for r in second] == [2]
+    assert all(len(r.out) == 1 for r in first + second)
 
 
-def test_admission_prefill_jits_once_per_length_bucket():
-    """Perf regression: admissions must reuse a jitted prefill per padded
-    prompt-length bucket instead of re-tracing model.prefill for every
-    new prompt length."""
+def test_mixed_prompt_lengths_share_one_closure_bit_exactly():
+    """Tentpole invariant: ANY prompt-length mix is served by ONE
+    compiled window closure — zero re-traces — and the chunked-prefill
+    path is bit-exact with the unpadded per-request reference."""
+    obs.reset()
     cfg, m, params = _model()
     sched = BatchScheduler(m, params, n_slots=2, max_len=32)
     refs = {}
@@ -141,13 +147,14 @@ def test_admission_prefill_jits_once_per_length_bucket():
     while len(done) < 5 and steps < 50:
         done += sched.step()
         steps += 1
-    # prompt lengths 1..9 prefill m = 0..8 tokens -> every admission
-    # lands in the single 8-wide bucket: ONE trace serves all five
-    assert sched._prefill_traces == 1
-    # ...and the padded path is bit-exact with the unpadded reference
+    reg = obs.registry()
+    assert reg.total("serve_jit_traces_total",
+                     closure="decode", tenant="A") == 1
+    assert reg.total("serve_jit_retraces_total") == 0
     for r in done:
         assert r.out == [int(t) for t in refs[r.rid]]
-    # a longer prompt opens a second bucket (16), one more trace
+    # a longer prompt (the old 16-wide bucket) reuses the SAME closure:
+    # still one trace, still bit-exact
     p = jax.random.randint(jax.random.PRNGKey(60), (12,), 0,
                            cfg.vocab - 1).astype(jnp.int32)
     ref = greedy_generate(m, params, {"tokens": p[None]}, max_new=2,
@@ -156,5 +163,7 @@ def test_admission_prefill_jits_once_per_length_bucket():
     done = []
     while not done:
         done += sched.step()
-    assert sched._prefill_traces == 2
+    assert reg.total("serve_jit_traces_total",
+                     closure="decode", tenant="A") == 1
+    assert reg.total("serve_jit_retraces_total") == 0
     assert done[0].out == [int(t) for t in ref]
