@@ -28,6 +28,21 @@ hot-swap.  Gates: zero dropped requests, zero retraces across the swap
 window, conservation on every lane's pool, and decode steps served
 DURING the write window (admissions kept flowing).
 
+Phase 4 — prefix sharing: four requests with a common 24-token head
+and distinct tails, staggered so followers admit after the head
+request's prompt pages are written.  Three arms (dense oracle, paged
+private, paged ``prefix_share=True``); gates: bit-exact streams on
+both paged arms, shared peak ``pages_in_use`` STRICTLY below private,
+shared pages aliased > 0, conservation every step, full reclaim at
+drain, zero retrace delta.
+
+Phase 5 — QoS preemption under pool saturation: an 8-page pool holds
+two low-QoS residents when two high-QoS requests arrive; preemption
+evicts the residents (pages reclaim, recomputable state spills to the
+host stub) and replays them through chunked prefill.  Gates: all four
+requests complete with ZERO drops, streams bit-exact vs dense,
+>= 1 eviction, zero retrace delta, conservation + full reclaim.
+
 CLI: ``python benchmarks/paged_bench.py --json BENCH_paged.json`` (exits
 nonzero if any gate fails).
 """
@@ -76,6 +91,28 @@ def _crossbar_cfg():
 def _prompt(rid, vocab, plen):
     return jax.random.randint(jax.random.PRNGKey(rid), (plen,), 0,
                               vocab - 1).astype(jnp.int32)
+
+
+def _serve_reqs(sched, reqs, submit_at):
+    """Submit ``reqs[i]`` at decode step ``submit_at[i]`` and drain;
+    returns ({rid: tokens}, steps, conservation_held, peak pages in
+    use across all lanes).  Staggering matters for the sharing phase:
+    a follower can only alias prompt pages the head request has
+    already written (and still holds)."""
+    done, steps, conserved, peak = {}, 0, True, 0
+    while len(done) < len(reqs) and steps < 2000:
+        for r, t in zip(reqs, submit_at):
+            if t == steps:
+                sched.submit(r)
+        for r in sched.step():
+            done[r.rid] = list(r.out)
+        in_use = 0
+        for rep in sched.kv_report().values():
+            conserved = conserved and rep["conservation_ok"]
+            in_use += rep["pages_in_use"]
+        peak = max(peak, in_use)
+        steps += 1
+    return done, steps, conserved, peak
 
 
 def _serve_stream(sched, vocab, plens, max_new, model_id="A", rid0=0,
@@ -207,6 +244,120 @@ def _swap_phase(max_new):
     }
 
 
+def _prefix_phase():
+    """Shared-prefix workload, three arms: dense (the bit-exactness
+    oracle), paged-private, and paged with --prefix-share.  Four
+    requests carry the same 24-token head (a shared system prompt) and
+    distinct 4-token tails, staggered so the head request's prompt
+    pages are fully written before any follower admits.  The shared
+    arm must serve the identical streams from strictly fewer peak
+    pages."""
+    cfg = _digital_cfg()
+    head = _prompt(7000, cfg.vocab, 24)
+    prompts = [jnp.concatenate([head, _prompt(7100 + i, cfg.vocab, 4)])
+               for i in range(4)]
+    # head admits at 0 and registers after ceil(28/chunk=4)=7 prefill
+    # steps; followers trail it and each other
+    submit_at = [0, 8, 10, 12]
+    max_new = 4
+    reg = obs.registry()
+    arms = {}
+    for arm, kv, share in (("dense", "dense", False),
+                           ("private", "paged", False),
+                           ("shared", "paged", True)):
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        retr0 = reg.total("serve_jit_retraces_total")
+        sched = BatchScheduler(model, params, 4, 32, kv=kv,
+                               page_size=_PAGE_SIZE, prefix_share=share)
+        reqs = [Request(rid=i, prompt=p, max_new=max_new)
+                for i, p in enumerate(prompts)]
+        done, steps, conserved, peak = _serve_reqs(sched, reqs, submit_at)
+        arms[arm] = {
+            "streams": done,
+            "completed": len(done),
+            "steps": steps,
+            "peak_pages_in_use": peak,
+            "conservation_every_step": conserved,
+            "retrace_delta": reg.total("serve_jit_retraces_total") - retr0,
+            "pages_in_use_at_drain": sum(
+                rep["pages_in_use"]
+                for rep in sched.kv_report().values()),
+        }
+        if share:
+            arms[arm]["pages_shared_total"] = int(
+                sched.metrics.total("serve_kv_pages_shared_total"))
+            arms[arm]["shared_tokens_total"] = int(
+                sched.metrics.total("serve_kv_shared_tokens_total"))
+            arms[arm]["cow_total"] = int(
+                sched.metrics.total("serve_kv_cow_total"))
+    bit_exact = (arms["shared"]["streams"] == arms["dense"]["streams"]
+                 and arms["private"]["streams"] == arms["dense"]["streams"])
+    for a in arms.values():
+        del a["streams"]
+    return {
+        "n_requests": len(prompts),
+        "common_head_tokens": 24,
+        "bit_exact_vs_dense": bool(bit_exact),
+        "peak_pages_private": arms["private"]["peak_pages_in_use"],
+        "peak_pages_shared": arms["shared"]["peak_pages_in_use"],
+        "arms": arms,
+    }
+
+
+def _preempt_phase():
+    """Pool-saturation preemption: two low-QoS requests fill a tight
+    8-page pool; two high-QoS requests arrive behind them.  With
+    --preemption the scheduler evicts the low-QoS residents (pages
+    reclaim, state spills to the host stub) and replays them through
+    chunked prefill after the high-QoS pair drains — every stream
+    bit-exact vs the dense oracle, zero drops, zero retraces."""
+    cfg = _digital_cfg()
+    prompts = [_prompt(8000 + i, cfg.vocab, 20) for i in range(4)]
+    qos = (1.0, 1.0, 4.0, 4.0)
+    submit_at = [0, 0, 8, 8]
+    max_new = 5
+    reg = obs.registry()
+    arms = {}
+    for arm in ("dense", "preempt"):
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        retr0 = reg.total("serve_jit_retraces_total")
+        if arm == "dense":
+            sched = BatchScheduler(model, params, 4, 32, kv="dense")
+        else:
+            sched = BatchScheduler(model, params, 3, 32, kv="paged",
+                                   page_size=_PAGE_SIZE, kv_pages=8,
+                                   preemption=True)
+        reqs = [Request(rid=i, prompt=p, max_new=max_new, qos=q)
+                for i, (p, q) in enumerate(zip(prompts, qos))]
+        done, steps, conserved, peak = _serve_reqs(sched, reqs, submit_at)
+        arms[arm] = {
+            "streams": done,
+            "completed": len(done),
+            "steps": steps,
+            "conservation_every_step": conserved,
+            "retrace_delta": reg.total("serve_jit_retraces_total") - retr0,
+            "pages_in_use_at_drain": sum(
+                rep["pages_in_use"]
+                for rep in sched.kv_report().values()),
+        }
+        if arm == "preempt":
+            arms[arm]["preemptions_total"] = int(
+                sched.metrics.total("serve_preemptions_total"))
+            arms[arm]["readmissions"] = sum(r.preemptions for r in reqs)
+    bit_exact = arms["preempt"]["streams"] == arms["dense"]["streams"]
+    for a in arms.values():
+        del a["streams"]
+    return {
+        "n_requests": len(prompts),
+        "kv_pages": 8,
+        "bit_exact_vs_dense": bool(bit_exact),
+        "preemptions": arms["preempt"]["preemptions_total"],
+        "arms": arms,
+    }
+
+
 def bench_paged(quick: bool = False):
     max_new = 5 if quick else 10
     steps, repeats = (25, 3) if quick else (50, 5)
@@ -215,6 +366,8 @@ def bench_paged(quick: bool = False):
     bit_exact = ragged["paged"]["streams"] == ragged["dense"]["streams"]
     thr_dense, thr_paged = _throughput_phase(steps, repeats)
     swap = _swap_phase(max_new)
+    prefix = _prefix_phase()
+    preempt = _preempt_phase()
 
     return {
         "us_per_call": 0.0,
@@ -236,11 +389,15 @@ def bench_paged(quick: bool = False):
         "paged_over_dense_throughput": thr_paged / max(thr_dense, 1e-12),
         "throughput_gate": _THROUGHPUT_GATE,
         "swap": swap,
+        "prefix_share": prefix,
+        "preemption": preempt,
     }
 
 
 def accepted(res) -> bool:
     swap = res["swap"]
+    pfx = res["prefix_share"]
+    pre = res["preemption"]
     return (res["paged_completed"] == res["n_requests"]
             and res["dense_completed"] == res["n_requests"]
             and res["paged_vs_dense_bit_exact"]
@@ -254,7 +411,26 @@ def accepted(res) -> bool:
             and swap["retraces_across_swap_window"] == 0
             and swap["swap_decode_steps_during"] > 0
             and swap["conservation_every_step"]
-            and swap["pages_in_use_at_drain"] == 0)
+            and swap["pages_in_use_at_drain"] == 0
+            # sharing: identical streams from strictly fewer peak pages
+            and all(a["completed"] == pfx["n_requests"]
+                    for a in pfx["arms"].values())
+            and pfx["bit_exact_vs_dense"]
+            and pfx["peak_pages_shared"] < pfx["peak_pages_private"]
+            and pfx["arms"]["shared"]["pages_shared_total"] > 0
+            and all(a["conservation_every_step"]
+                    and a["retrace_delta"] == 0
+                    and a["pages_in_use_at_drain"] == 0
+                    for a in pfx["arms"].values())
+            # preemption: saturation resolves with zero drops
+            and all(a["completed"] == pre["n_requests"]
+                    for a in pre["arms"].values())
+            and pre["bit_exact_vs_dense"]
+            and pre["preemptions"] >= 1
+            and all(a["conservation_every_step"]
+                    and a["retrace_delta"] == 0
+                    and a["pages_in_use_at_drain"] == 0
+                    for a in pre["arms"].values()))
 
 
 def main(argv=None):
@@ -285,6 +461,17 @@ def main(argv=None):
           f"{swap['completed']}/{swap['expected']} done with "
           f"{swap['retraces_across_swap_window']} retraces and "
           f"{swap['swap_decode_steps_during']} decode steps in-window")
+    pfx, pre = res["prefix_share"], res["preemption"]
+    print(f"# prefix-share: bit-exact ({pfx['bit_exact_vs_dense']}), "
+          f"peak pages {pfx['peak_pages_shared']} shared vs "
+          f"{pfx['peak_pages_private']} private (want <), "
+          f"{pfx['arms']['shared']['pages_shared_total']} pages aliased, "
+          f"{pfx['arms']['shared']['shared_tokens_total']} prompt tokens "
+          f"skipped, {pfx['arms']['shared']['cow_total']} COW copies; "
+          f"preemption: bit-exact ({pre['bit_exact_vs_dense']}), "
+          f"{pre['preemptions']} evictions, "
+          f"{pre['arms']['preempt']['completed']}/{pre['n_requests']} "
+          f"completed with 0 drops")
     return 0 if ok else 1
 
 

@@ -17,6 +17,12 @@ Grid = (batch,): each step serves ONE sequence row.  Inside the body:
     — rows sit at different depths under continuous batching, and the
     causal offset must not be a trace constant.
 
+The gather is READ-ONLY, so aliased page tables (two rows sharing
+physical prefix pages under the scheduler's refcounted prefix sharing)
+are in-contract and bit-exact vs materialized private copies; the
+scheduler's copy-on-write keeps *writes* off shared pages before this
+kernel ever runs (docs/KERNELS.md).
+
 VMEM budget per step (one row): the gathered K+V views dominate at
 2 * max_len * kv_heads * head_dim elements — at the serving tier's
 decode shapes (max_len <= a few k, GQA'd kv_heads) this is well under

@@ -5,6 +5,13 @@ dispatches the kernel; the kernel stays a pure shape-in/shape-out
 Pallas call.  No padding is needed here — the serving tier guarantees
 ``page_size | max_len`` (kv_pool.py enforces it), so the gathered depth
 is already the dense path's ``max_len``.
+
+Page tables may ALIAS: no validation here (or in the kernel) assumes
+table entries are unique across rows.  Refcounted prefix sharing
+(serve/kv_pool.py) points several rows' tables at the same physical
+pages, and the read-only gather makes that bitwise-indistinguishable
+from private copies — see docs/KERNELS.md, "Aliased page tables are
+in-contract".
 """
 from __future__ import annotations
 

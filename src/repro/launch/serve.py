@@ -35,6 +35,19 @@ slot split and admission order.  Combined with ``--hot-swap``, the swap
 targets the LAST tenant: its planes reprogram under the other tenants'
 uninterrupted traffic.
 
+``--prefix-share`` turns on refcounted prompt-prefix sharing in the
+paged pool: requests whose prompt head token-matches fully-written
+pages of a resident request alias those physical pages (per-page
+refcounts; copy-on-write when a row would write inside a shared page),
+skipping the aliased prefill compute entirely.  ``--common-prefix N``
+prepends the same N-token head to every synthetic prompt so the demo
+has a shared system prompt to find.  ``--preemption`` adds QoS
+preemption: when the pool (or a tenant's budget) saturates, the
+lowest-QoS in-flight request is evicted — pages reclaim, the request
+re-enters the queue and replays through chunked prefill with a
+bit-identical output stream and zero drops.  Both require ``--kv
+paged`` and compose with everything below.
+
 ``--mode-policy auto|expansion|deepnet|name=mode,...`` makes read mode a
 per-weight bank policy (the paper's expansion mode at the serving tier):
 expansion-programmed weights fuse two planes into one doubled-input
@@ -135,6 +148,27 @@ def main(argv=None):
     ap.add_argument("--chunk", type=int, default=4,
                     help="prompt tokens fed per step while a request "
                          "prefills inside the running decode batch")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="refcounted prefix sharing: requests whose "
+                         "prompt head matches fully-written pages of a "
+                         "resident request alias those pages instead of "
+                         "re-filling them (copy-on-write on sub-page "
+                         "divergence); requires --kv paged")
+    ap.add_argument("--preemption", action="store_true",
+                    help="QoS preemption: when the page pool or a "
+                         "tenant budget saturates, evict the lowest-QoS "
+                         "in-flight request (its pages reclaim; the "
+                         "request re-admits via chunked prefill with a "
+                         "bit-identical stream); requires --kv paged")
+    ap.add_argument("--common-prefix", type=int, default=0, metavar="N",
+                    help="prepend the same N-token head to every "
+                         "synthetic prompt (a shared system prompt) so "
+                         "--prefix-share has aliasable pages to find")
+    ap.add_argument("--stagger", type=int, default=0, metavar="N",
+                    help="submit request i at decode step i*N instead "
+                         "of all upfront; sharing needs the head "
+                         "request's prompt pages written (and still "
+                         "resident) before a follower admits")
     ap.add_argument("--hot-swap", default=None, metavar="SPEC",
                     help="second checkpoint to deploy mid-serving "
                          "(ft:<scale> | seed:<int> | checkpoint dir); "
@@ -193,6 +227,9 @@ def main(argv=None):
         raise SystemExit("--multiplex requires --backend crossbar")
     if args.mode_policy and args.backend != "crossbar":
         raise SystemExit("--mode-policy requires --backend crossbar")
+    if (args.prefix_share or args.preemption) and args.kv != "paged":
+        raise SystemExit("--prefix-share/--preemption operate on the "
+                         "page pool; they require --kv paged")
     mode_policy = parse_mode_policy(args.mode_policy)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -247,7 +284,9 @@ def main(argv=None):
                            mode_policy=mode_policy,
                            telemetry=not args.no_telemetry,
                            kv=args.kv, page_size=args.page_size,
-                           kv_pages=args.kv_pages, chunk=args.chunk)
+                           kv_pages=args.kv_pages, chunk=args.chunk,
+                           prefix_share=args.prefix_share,
+                           preemption=args.preemption)
     if args.kv == "paged":
         pools = sched.kv_report()
         desc = ", ".join(f"{t}:{r['n_pages']}p" for t, r in pools.items())
@@ -287,14 +326,24 @@ def main(argv=None):
                 print(f"  ... {len(rep['layers']) - 6} more weight grids "
                       f"(sched.mode_report() for the full table)")
     key = jax.random.PRNGKey(1)
+    head = jax.random.randint(jax.random.PRNGKey(2),
+                              (args.common_prefix,), 0,
+                              cfg.vocab - 1).astype(jnp.int32)
+    reqs = []
     for rid in range(args.requests):
         key, k = jax.random.split(key)
         prompt = jax.random.randint(k, (args.prompt_len,), 0,
                                     cfg.vocab - 1).astype(jnp.int32)
+        if args.common_prefix:
+            # a shared system prompt: identical head, distinct tails
+            prompt = jnp.concatenate([head, prompt])
         # multiplexed serving round-robins the tenants' token streams
         model_id = tenant_ids[rid % len(tenant_ids)]
-        sched.submit(Request(rid=rid, prompt=prompt, max_new=args.max_new,
-                             model_id=model_id))
+        # under --preemption the later half arrives at a higher QoS so a
+        # saturated pool demonstrates eviction + re-admission
+        qos = 2.0 if args.preemption and rid >= args.requests // 2 else 1.0
+        reqs.append(Request(rid=rid, prompt=prompt, max_new=args.max_new,
+                            model_id=model_id, qos=qos))
 
     swap_after = (args.swap_after if args.swap_after is not None
                   else args.requests // 2)
@@ -318,8 +367,12 @@ def main(argv=None):
               f"({', '.join(parts)}); jit retraces {retr}")
 
     t0 = time.time()
-    done, steps = [], 0
+    done, steps, n_submitted = [], 0, 0
     while len(done) < args.requests and steps < 10_000:
+        while (n_submitted < len(reqs)
+               and steps >= n_submitted * args.stagger):
+            sched.submit(reqs[n_submitted])
+            n_submitted += 1
         if (swap_params is not None and not sched.swap_in_flight
                 and not sched.swap_history and len(done) >= swap_after):
             hs = sched.begin_hot_swap(swap_params,
@@ -346,6 +399,21 @@ def main(argv=None):
     print(f"served {len(done)} requests, {total_tokens} tokens in "
           f"{steps} decode steps, {dt:.2f}s "
           f"({total_tokens / max(dt, 1e-9):.1f} tok/s)")
+    if (args.prefix_share or args.preemption) and sched.metrics.enabled:
+        reg = sched.metrics
+        if args.prefix_share:
+            print(f"prefix sharing: "
+                  f"{int(reg.total('serve_kv_pages_shared_total'))} pages "
+                  f"aliased, "
+                  f"{int(reg.total('serve_kv_shared_tokens_total'))} "
+                  f"prompt tokens skipped, "
+                  f"{int(reg.total('serve_kv_cow_total'))} copy-on-write "
+                  f"page copies")
+        if args.preemption:
+            n_evict = int(reg.total("serve_preemptions_total"))
+            print(f"preemption: {n_evict} evictions, "
+                  f"{sum(r.preemptions for r in done)} re-admissions, "
+                  f"zero dropped requests")
     if tenants:
         qos = sched.qos_report()
         for t in sched.tenants:

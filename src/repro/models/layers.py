@@ -363,6 +363,25 @@ def paged_cache_specs(cfg: AttnConfig):
             "len": ("batch",), "pt": ("batch", None)}
 
 
+@jax.jit
+def paged_copy_page(layers, src, dst):
+    """Duplicate physical page ``src`` into ``dst`` across every layer's
+    K/V pool — the device half of copy-on-write (serve/kv_pool.py
+    privatizes a shared page before a row's own tokens overwrite it).
+    ``layers`` is the scheduler's stacked per-layer dict: ``k``/``v``
+    are ``(n_layers, n_pages + 1, page_size, kv_eff, head_dim)``.
+    ``src``/``dst`` are traced scalars, so ONE compiled copy serves
+    every page pair (no per-page-id retrace); page tables and fill
+    markers pass through untouched — the pool owns them."""
+    out = dict(layers)
+    for key in ("k", "v"):
+        page = jax.lax.dynamic_index_in_dim(layers[key], src, axis=1,
+                                            keepdims=True)
+        out[key] = jax.lax.dynamic_update_slice_in_dim(
+            layers[key], page, dst, axis=1)
+    return out
+
+
 # -- MLPs ----------------------------------------------------------------------
 
 def mlp_init(key, d_model: int, d_ff: int, act: str):

@@ -132,6 +132,8 @@ class Model:
     # paged-KV serving (transformer decoder families; None elsewhere)
     init_paged_cache: Any = None
     paged_cache_specs: Any = None
+    # copy-on-write page duplication for the prefix-sharing scheduler
+    copy_paged_page: Any = None
 
 
 # ---------------------------------------------------------------------------
@@ -292,6 +294,14 @@ def _build_transformer(cfg: ModelConfig) -> Model:
             lambda names: ("layers",) + names, cs,
             is_leaf=lambda x: type(x) is tuple)}
 
+    def copy_paged_page(cache, src, dst):
+        """Copy-on-write plumbing: duplicate physical KV page ``src``
+        into ``dst`` in every layer (page tables untouched — the pool
+        retargets them host-side).  One jitted copy serves every page
+        pair; see ``layers.paged_copy_page``."""
+        return dict(cache, layers=L.paged_copy_page(
+            cache["layers"], jnp.int32(src), jnp.int32(dst)))
+
     def prefill(params, batch, cache):
         """Prefill the KV cache with a full prompt; returns last logits.
 
@@ -353,7 +363,8 @@ def _build_transformer(cfg: ModelConfig) -> Model:
     return Model(cfg, init, param_specs, loss_fn, _on_crossbar(prefill),
                  _on_crossbar(decode_step), init_cache, cache_specs,
                  executor=executor, init_paged_cache=init_paged_cache,
-                 paged_cache_specs=paged_cache_specs)
+                 paged_cache_specs=paged_cache_specs,
+                 copy_paged_page=copy_paged_page)
 
 
 # ---------------------------------------------------------------------------

@@ -88,9 +88,23 @@ class Request:
     model_id: str = "A"        # tenant whose checkpoint serves this request
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # preemption priority: under pool saturation the scheduler may evict
+    # a resident request of strictly lower qos to admit a waiting one
+    qos: float = 1.0
     # chunked-prefill progress: prompt tokens already fed to the window
     # closure (scheduler-owned; the first token emits once fed == len)
     fed: int = 0
+    # the admission feed (scheduler-owned): prompt tokens, plus — after
+    # a preemption — the tokens already emitted, so re-admission replays
+    # the whole recomputable state through chunked prefill.  This object
+    # IS the host-side spill stub: prompt + out fully determine the
+    # greedy continuation, no device state needs saving.
+    feed: Optional[np.ndarray] = None
+    # times this request was evicted (pages reclaimed) and re-queued
+    preemptions: int = 0
+    # token positions whose K/V arrived via aliased prefix pages instead
+    # of prefill compute (cumulative across re-admissions)
+    shared_tokens: int = 0
     # pages the pool allocated at admission (None on the dense path)
     bucket: Optional[int] = None
     # lifecycle timestamps (scheduler tracer clock), filled in by the
@@ -184,11 +198,24 @@ class BatchScheduler:
     admission is pure host bookkeeping (slot + page-table assignment).
 
     KV storage defaults to a block-paged pool per lane (``kv="paged"``):
-    pages of ``page_size`` tokens, per-slot page tables, free-list
-    allocation at admission and reclaim at completion
+    pages of ``page_size`` tokens, per-slot page tables, refcounted
+    free-list allocation at admission and reclaim at completion
     (serve/kv_pool.py).  ``kv="dense"`` keeps the per-slot dense cache —
     same closure, same streams (the bit-exactness oracle the paged
-    bench gates against).
+    bench gates against).  Two opt-in paged policies:
+
+    * ``prefix_share=True`` — requests whose feed shares a head with an
+      already-prefilled row alias its prefix pages (per-page refcounts,
+      copy-on-write when a shared page would take the new row's own
+      tokens) and skip the shared prefill positions entirely, so N
+      common-head requests peak well below N private copies while
+      staying bit-exact with the dense oracle.
+    * ``preemption=True`` — under pool/budget saturation a waiting
+      request of strictly higher ``Request.qos`` evicts the
+      lowest-QoS resident (pages reclaimed, recomputable state spilled
+      host-side) instead of FIFO-waiting; the victim re-admits later
+      through the ordinary chunked-prefill path and continues its
+      stream bit-exactly, with zero drops and zero retraces.
 
     Passing ``tenants={"A": params_a, "B": params_b, ...}`` multiplexes
     up to ``stack_planes`` checkpoints from the plane bank of ONE
@@ -210,9 +237,14 @@ class BatchScheduler:
                  tenants: Optional[Dict[str, Any]] = None,
                  mode_policy=None, telemetry: bool = True,
                  kv: str = "paged", page_size: int = 8,
-                 kv_pages: Optional[int] = None, chunk: int = 4):
+                 kv_pages: Optional[int] = None, chunk: int = 4,
+                 prefix_share: bool = False, preemption: bool = False):
         if kv not in ("paged", "dense"):
             raise ValueError(f"kv must be 'paged' or 'dense', got {kv!r}")
+        if (prefix_share or preemption) and kv != "paged":
+            raise ValueError(
+                "prefix_share/preemption operate on the page pool; "
+                "they require kv='paged'")
         if kv == "paged" and model.init_paged_cache is None:
             raise ValueError(
                 f"model family {model.cfg.family!r} has no paged cache; "
@@ -226,6 +258,8 @@ class BatchScheduler:
         self.n_slots, self.max_len = n_slots, max_len
         self.kv, self.page_size, self.chunk = kv, page_size, int(chunk)
         self.kv_pages = kv_pages
+        self.prefix_share = bool(prefix_share)
+        self.preemption = bool(preemption)
         self.pages_per_seq = (max_len // page_size if kv == "paged"
                               else 0)
         self.mode_policy = mode_policy
@@ -666,23 +700,28 @@ class BatchScheduler:
     def _admit(self, lane: _Lane) -> None:
         """Move queued requests into free slots.
 
-        Pure host bookkeeping — a slot index, a page-table row, a
-        zeroed fill marker — so admission can NEVER stall an in-flight
-        decode step; the admitted prompt streams into the running batch
-        as prefill chunks on subsequent :meth:`step` calls.  When the
-        page pool (or the QoS page budget) cannot cover a request's
-        whole lifetime (``min(prompt + max_new - 1, max_len)`` tokens,
+        Pure host bookkeeping — a slot index, a page-table row, a fill
+        marker — so admission can NEVER stall an in-flight decode step;
+        the admitted prompt streams into the running batch as prefill
+        chunks on subsequent :meth:`step` calls.  When the page pool
+        (or the QoS page budget) cannot cover a request's whole
+        lifetime (``min(prompt + max_new - 1, max_len)`` tokens,
         claimed up front so an admitted request can never deadlock
-        mid-decode), the request simply waits in FIFO order — queued,
-        never dropped.
+        mid-decode), the request waits in FIFO order — queued, never
+        dropped — unless ``preemption`` is on and a strictly
+        lower-QoS resident can be evicted (see :meth:`_preempt_for`).
+
+        With ``prefix_share`` on, the allocation consults the pool's
+        prefix index: pages whose token chain matches the head of this
+        request's feed are aliased (refcounted) instead of freshly
+        claimed, the fill marker and prefill cursor start past the
+        shared positions (their K/V is already written), and any
+        partially-covered aliased page is privatized copy-on-write —
+        the device page copy happens here, before the row's first
+        write.  The admitted streams stay bit-exact with the dense
+        oracle because a chain hit pins page contents byte-for-byte.
         """
         while lane.queue:
-            active = sum(s is not None for s in lane.slots)
-            if active >= lane.n_slots:
-                return
-            free = [i for i, s in enumerate(lane.slots) if s is None]
-            if not free:
-                return
             req = lane.queue[0]
             plen = int(req.prompt.shape[0])
             if plen - 1 >= self.max_len:
@@ -692,27 +731,125 @@ class BatchScheduler:
                 # off the end
                 raise ValueError(f"prompt length {plen} exceeds the "
                                  f"scheduler's max_len {self.max_len}")
+            free = [i for i, s in enumerate(lane.slots) if s is None]
+            active = sum(s is not None for s in lane.slots)
+            if active >= lane.n_slots or not free:
+                if not (self.preemption and self._preempt_for(lane, req)):
+                    return
+                continue
             row = free[0]
-            layers = dict(lane.cache["layers"])
+            # the feed replays prompt + (after a preemption) the tokens
+            # already emitted — greedy decode is deterministic, so the
+            # re-prefilled row continues its stream bit-exactly
+            feed = np.asarray(req.prompt, np.int32)
+            if req.out:
+                feed = np.concatenate(
+                    [feed, np.asarray(req.out, np.int32)])
+            shared = 0
+            cow_pairs: List[Any] = []
             if lane.pool is not None:
                 need = min(plen + req.max_new - 1, self.max_len)
-                if not lane.pool.can_alloc(need):
-                    return                    # backpressure: wait, FIFO
-                pages = lane.pool.alloc(row, need)
+                if self.prefix_share:
+                    if not lane.pool.can_alloc_shared(need, feed):
+                        if not (self.preemption
+                                and self._preempt_for(lane, req)):
+                            return        # backpressure: wait, FIFO
+                        continue
+                    pages, shared, cow_pairs = lane.pool.alloc_shared(
+                        row, need, feed)
+                else:
+                    if not lane.pool.can_alloc(need):
+                        if not (self.preemption
+                                and self._preempt_for(lane, req)):
+                            return        # backpressure: wait, FIFO
+                        continue
+                    pages = lane.pool.alloc(row, need)
                 req.bucket = len(pages)
+                for src, dst in cow_pairs:
+                    lane.cache = self.model.copy_paged_page(
+                        lane.cache, src, dst)
+            layers = dict(lane.cache["layers"])
+            if lane.pool is not None:
                 tab = jnp.asarray(lane.pool.table_row(row))
                 layers["pt"] = layers["pt"].at[:, row].set(tab[None])
-            layers["len"] = layers["len"].at[:, row].set(0)
+            # shared positions are pre-written: the fill marker starts
+            # past them and prefill skips straight to the divergence
+            layers["len"] = layers["len"].at[:, row].set(shared)
             lane.cache = dict(lane.cache, layers=layers)
             lane.queue.pop(0)
-            req.fed = 0
-            req.t_admit = self.tracer.now()
-            if self.metrics.enabled and req.t_submit is not None:
-                self.metrics.histogram(
-                    "serve_queue_wait_seconds",
-                    help="submit-to-admission wait").observe(
-                    req.t_admit - req.t_submit, tenant=lane.tenant)
+            req.feed = feed
+            req.fed = shared
+            req.shared_tokens += shared
+            if shared and self.metrics.enabled:
+                self.metrics.counter(
+                    "serve_kv_pages_shared_total",
+                    help="KV pages aliased from the prefix index at "
+                         "admission instead of freshly written").inc(
+                    lane.pool.row_shared_pages(row), tenant=lane.tenant)
+                self.metrics.counter(
+                    "serve_kv_shared_tokens_total",
+                    help="prefill token positions skipped because their "
+                         "K/V arrived via shared pages").inc(
+                    shared, tenant=lane.tenant)
+            if cow_pairs and self.metrics.enabled:
+                self.metrics.counter(
+                    "serve_kv_cow_total",
+                    help="shared pages privatized copy-on-write at "
+                         "admission").inc(len(cow_pairs),
+                                          tenant=lane.tenant)
+            if req.t_admit is None:
+                # first admission only: re-admissions after a preemption
+                # keep the original timestamps so the span set still
+                # telescopes over the request's real wall time
+                req.t_admit = self.tracer.now()
+                if self.metrics.enabled and req.t_submit is not None:
+                    self.metrics.histogram(
+                        "serve_queue_wait_seconds",
+                        help="submit-to-admission wait").observe(
+                        req.t_admit - req.t_submit, tenant=lane.tenant)
             lane.slots[row] = req
+
+    def _preempt_for(self, lane: _Lane, head: Request) -> bool:
+        """Evict one resident request so ``head`` can admit.
+
+        Victims must sit at *strictly* lower ``qos`` than the waiting
+        request — strictness keeps equal-priority traffic pure FIFO and
+        guarantees preemption chains terminate (each eviction is paid
+        for by a strictly higher-QoS admission, so no two requests can
+        evict each other forever).  Among candidates the lowest QoS
+        goes first; ties evict the least-progressed request (cheapest
+        to recompute), then the highest row for determinism.
+
+        Eviction reclaims the victim's pages (refcount-aware: pages it
+        shares with other rows survive for them) and spills its
+        recomputable state to the host-side stub it already carries —
+        the ``Request`` itself, whose prompt + emitted tokens fully
+        determine the greedy continuation.  The victim re-queues right
+        behind ``head`` and later re-admits through the ordinary
+        chunked-prefill path, continuing its stream bit-exactly (and
+        through the SAME compiled closure: eviction is host
+        bookkeeping, so the retrace count stays zero across the
+        preempt/re-admit boundary).
+        """
+        cands = [(i, r) for i, r in enumerate(lane.slots)
+                 if r is not None and r.qos < head.qos]
+        if not cands:
+            return False
+        row, victim = min(
+            cands,
+            key=lambda ir: (ir[1].qos, ir[1].fed + len(ir[1].out),
+                            -ir[0]))
+        victim.preemptions += 1
+        victim.fed = 0
+        victim.feed = None
+        self._release_slot(lane, row)
+        lane.queue.insert(min(1, len(lane.queue)), victim)
+        self.metrics.counter(
+            "serve_preemptions_total",
+            help="resident requests evicted (pages reclaimed, state "
+                 "spilled to host) to admit higher-QoS work").inc(
+            tenant=lane.tenant)
+        return True
 
     def _release_slot(self, lane: _Lane, row: int) -> None:
         """Return a completed slot: reclaim its pages and null its
@@ -756,17 +893,24 @@ class BatchScheduler:
             toks = np.zeros((lane.width, c), np.int32)
             m = np.zeros((lane.width,), np.int32)
             emit: List[Optional[str]] = [None] * lane.width
+            reg_rows: List[int] = []
             for i, req in enumerate(lane.slots):
                 if req is None:
                     continue
-                plen = int(req.prompt.shape[0])
-                if req.fed < plen:
-                    piece = np.asarray(req.prompt[req.fed:req.fed + c])
+                feed = req.feed
+                flen = int(feed.shape[0])
+                if req.fed < flen:
+                    piece = feed[req.fed:req.fed + c]
                     toks[i, :piece.shape[0]] = piece
                     m[i] = piece.shape[0]
                     req.fed += int(piece.shape[0])
-                    if req.fed >= plen:
-                        emit[i] = "admission"   # final chunk: 1st token
+                    if req.fed >= flen:
+                        # final chunk: the argmax is the request's first
+                        # token — or, on a post-preemption re-admission
+                        # (out non-empty), the continuation of a stream
+                        # that already started
+                        emit[i] = "admission" if not req.out else "decode"
+                        reg_rows.append(i)
                 else:
                     toks[i, 0] = req.out[-1]
                     m[i] = 1
@@ -777,6 +921,14 @@ class BatchScheduler:
                 jnp.asarray(m), leak)
             decoded = True
             tok_host = np.asarray(tok)
+            if self.prefix_share and lane.pool is not None:
+                # prefill just completed for these rows: every page
+                # wholly covered by the feed is final on device now —
+                # index it so later common-head admissions alias it
+                for i in reg_rows:
+                    if lane.slots[i] is not None:
+                        lane.pool.register_prefix(
+                            i, lane.slots[i].feed.tolist())
             n_admit = n_dec = 0
             for i, req in enumerate(lane.slots):
                 if req is None or emit[i] is None:
@@ -903,5 +1055,7 @@ class BatchScheduler:
             if lane.pool is not None:
                 entry["page_budget"] = lane.pool.budget
                 entry["pages_in_use"] = lane.pool.pages_in_use
+                entry["pages_owned"] = lane.pool.pages_owned
+                entry["pages_shared"] = lane.pool.pages_shared
             out[t] = entry
         return out

@@ -1,0 +1,24 @@
+"""Shared test configuration: pinned hypothesis profiles.
+
+The CI property lane (``test-property`` in .github/workflows/ci.yml)
+runs the slow-marked hypothesis suites under the deterministic ``ci``
+profile: derandomized (a red lane reproduces locally with
+``HYPOTHESIS_PROFILE=ci``), an explicit example budget, and no deadline
+(interpret-mode jit warmup dwarfs any per-example deadline).  The
+default ``dev`` profile keeps random exploration but also drops the
+deadline for the same reason.  Import-gated: environments without
+hypothesis still run every seeded fallback test.
+"""
+import os
+
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:      # pragma: no cover - env without hypothesis
+    pass
+else:
+    settings.register_profile(
+        "ci", derandomize=True, deadline=None, max_examples=25,
+        print_blob=True,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.register_profile("dev", deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))

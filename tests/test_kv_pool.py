@@ -34,7 +34,12 @@ def test_pages_for_rounds_up_and_clamps_to_max_len():
     assert pool.pages_for(5) == 2
     assert pool.pages_for(16) == 4
     assert pool.pages_for(99) == 4     # lifetime never exceeds max_len
-    assert pool.pages_for(0) == 1      # a resident row owns >= 1 page
+    # zero tokens claim zero pages: admission sizes rows by
+    # min(prompt_len + max_new - 1, max_len) >= 1, so the old floor of
+    # 1 was never load-bearing — and the share planner needs exact
+    # sizing for partial spans (pages_for(shared_tokens))
+    assert pool.pages_for(0) == 0
+    assert pool.pages_for(-3) == 0
 
 
 def test_alloc_reclaim_conserves_pages():
@@ -120,3 +125,135 @@ def test_report_fields():
 def test_default_pool_pages():
     assert default_pool_pages(4, 32, 8) == 16          # 4 rows x 4 pages
     assert default_pool_pages(4, 32, 8, kv_pages=10) == 10
+
+
+# -- prefix sharing / refcounts / copy-on-write -------------------------------
+
+
+def _admit_and_register(pool, row, tokens, max_new=4):
+    """Mirror the scheduler's lifecycle: whole-lifetime alloc, prefill,
+    then index the fully-written prompt pages."""
+    need = min(len(tokens) + max_new - 1, pool.max_len)
+    pages = pool.alloc(row, need)
+    pool.register_prefix(row, tokens)
+    return pages
+
+
+def test_shared_alloc_aliases_prefix_pages_refcounted():
+    pool = _pool(n_pages=8, page_size=4, max_len=16)
+    toks = list(range(10, 20))                     # 10 tokens: 2 full pages
+    pages0 = _admit_and_register(pool, 0, toks)    # 13 tok -> 4 pages
+    used0 = pool.pages_in_use
+    # same head, divergent tail: the 2 fully-covered pages alias
+    toks1 = toks[:8] + [99, 98]
+    pages1, shared, cow = pool.alloc_shared(1, 13, toks1)
+    assert shared == 8 and not cow
+    assert pages1[:2] == pages0[:2]                # aliased, same phys
+    assert pool.refcount(pages0[0]) == 2 and pool.refcount(pages0[1]) == 2
+    # distinct pages_in_use grew only by the fresh tail, not 4
+    assert pool.pages_in_use == used0 + 2
+    assert pool.pages_shared == 2
+    assert pool.row_shared_pages(1) == 2
+    assert pool.conservation_ok()
+    # freeing the owner keeps the shared pages alive for row 1
+    pool.free_row(0)
+    assert pool.refcount(pages0[0]) == 1
+    assert pool.pages_shared == 0 and pool.conservation_ok()
+    pool.free_row(1)
+    assert pool.pages_in_use == 0 and pool.conservation_ok()
+
+
+def test_shared_alloc_never_shares_the_whole_prompt():
+    """The final prompt token must flow through the model to emit the
+    first output token, so sharing caps at plen - 1 — a duplicate
+    prompt aliases every page but COWs the last one."""
+    pool = _pool(n_pages=8, page_size=4, max_len=16)
+    toks = list(range(30, 38))                     # exactly 2 pages
+    pages0 = _admit_and_register(pool, 0, toks)
+    pages1, shared, cow = pool.alloc_shared(1, 11, toks)
+    assert shared == 7                             # plen - 1, not 8
+    assert len(cow) == 1
+    src, dst = cow[0]
+    assert src == pages0[1] and dst == pages1[1] and src != dst
+    # after COW the tables no longer alias at that logical position
+    assert pool.refcount(src) == 1 and pool.refcount(dst) == 1
+    assert pool.conservation_ok()
+
+
+def test_sub_page_extension_match_cows_the_partial_page():
+    pool = _pool(n_pages=10, page_size=4, max_len=16)
+    toks = list(range(40, 50))                     # 10 tokens
+    pages0 = _admit_and_register(pool, 0, toks)
+    # matches page 0 fully and 2 of page 1's 4 tokens
+    toks1 = toks[:6] + [77, 76, 75, 74]
+    pages1, shared, cow = pool.alloc_shared(1, 13, toks1)
+    assert shared == 6                             # 4 whole + 2 partial
+    assert pages1[0] == pages0[0]                  # whole page aliased
+    assert len(cow) == 1 and cow[0][0] == pages0[1]
+    assert pages1[1] == cow[0][1] != pages0[1]     # partial page private
+    assert pool.conservation_ok()
+
+
+def test_no_match_degrades_to_private_alloc():
+    pool = _pool(n_pages=8, page_size=4, max_len=16)
+    _admit_and_register(pool, 0, list(range(10, 18)))
+    pages, shared, cow = pool.alloc_shared(1, 8, [1, 2, 3, 4, 5])
+    assert shared == 0 and not cow and len(pages) == 2
+    assert pool.pages_shared == 0 and pool.conservation_ok()
+
+
+def test_freed_pages_leave_the_prefix_index():
+    """A page whose last reference drops must become unreachable via its
+    token keys — the free list will recycle the id under new contents."""
+    pool = _pool(n_pages=8, page_size=4, max_len=16)
+    toks = list(range(50, 58))
+    _admit_and_register(pool, 0, toks)
+    assert pool.prefix_entries == 2
+    pool.free_row(0)
+    assert pool.prefix_entries == 0
+    plan = pool.plan_shared(8, toks)
+    assert plan["shared_tokens"] == 0 and not plan["aliased"]
+
+
+def test_budget_gates_shared_plans_on_fresh_pages_only():
+    """Aliased pages cost no new allocation: a shared plan fits as long
+    as its FRESH remainder fits the budget, so sharing admits where a
+    private copy would not."""
+    pool = _pool(n_pages=8, page_size=4, max_len=16)
+    toks = list(range(60, 70))                     # 2 full pages indexed
+    _admit_and_register(pool, 0, toks)             # 4 pages in use
+    pool.set_budget(6)
+    toks1 = toks[:8] + [99, 98]
+    assert not pool.can_alloc(13)                  # private: 4 fresh > 2
+    assert pool.can_alloc_shared(13, toks1)        # shared: 2 fresh fit
+    pages, shared, _ = pool.alloc_shared(1, 13, toks1)
+    assert shared == 8 and pool.pages_in_use == 6
+    assert pool.conservation_ok()
+
+
+def test_cow_requires_free_page():
+    pool = _pool(n_pages=4, page_size=4, max_len=16, n_rows=3)
+    toks = list(range(4))
+    pool.alloc(0, 8)                               # 2 pages
+    pool.register_prefix(0, toks)
+    pages, shared, _ = pool.alloc_shared(1, 8, toks[:3] + [9, 9, 9])
+    # pool is now full (4 distinct); force-share row 1's aliased page
+    assert pool.pages_free == 0
+    pool._ref[pages[0]] += 1
+    pool._rows[2] = [pages[0]]
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.cow(2, 0)
+    pool._rows[2] = []
+    pool._ref[pages[0]] -= 1
+
+
+def test_report_owned_vs_shared():
+    pool = _pool(n_pages=8, page_size=4, max_len=16)
+    toks = list(range(20, 28))
+    _admit_and_register(pool, 0, toks)             # 2 full + 1 tail page
+    pool.alloc_shared(1, 11, toks[:8] + [5, 6])
+    rep = pool.report()
+    assert rep["pages_shared"] == 2
+    assert rep["pages_owned"] == rep["pages_in_use"] - 2
+    assert rep["prefix_entries"] == 2
+    assert rep["conservation_ok"] is True

@@ -1,0 +1,215 @@
+"""Stateful property test for the refcounted copy-on-write page pool.
+
+A single operation model drives random alloc / alloc_shared /
+register_prefix / COW / budget-shrink / preempt(free) sequences against
+``PagedKVPool`` and checks, after EVERY operation:
+
+* conservation, refcount-aware: distinct ``pages_in_use + pages_free
+  == n_pages`` AND ``sum(refcounts) == total page-table entries``;
+* the null page is never allocated, never refcounted, never freed;
+* no aliasing after COW: a copy-on-write page has refcount 1 and its
+  source keeps exactly its remaining referents;
+* a row's table never repeats a physical page;
+* budget stays clamped to ``[1, n_pages]`` and only ever gates NEW
+  admissions (live rows keep their pages across shrinks).
+
+With hypothesis installed (the ``[test]`` extra — the CI property lane)
+a ``RuleBasedStateMachine`` explores operation interleavings under the
+pinned profile from ``tests/conftest.py``; without it, a seeded
+random-walk fallback replays the same operation mix so the invariants
+still run everywhere (pattern from test_hotswap_property.py).
+"""
+import random
+
+import pytest
+
+from repro.serve.kv_pool import NULL_PAGE, PagedKVPool
+
+try:
+    from hypothesis import settings
+    from hypothesis import strategies as st
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     invariant, rule)
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - env without hypothesis
+    HAVE_HYPOTHESIS = False
+
+N_PAGES, PAGE_SIZE, MAX_LEN, N_ROWS = 12, 4, 16, 5
+VOCAB = 3       # tiny alphabet => prompt heads collide => sharing fires
+MAX_NEW = 4
+
+
+class PoolDriver:
+    """The shared operation model both drivers exercise."""
+
+    def __init__(self):
+        self.pool = PagedKVPool(N_PAGES, PAGE_SIZE, MAX_LEN, N_ROWS)
+        # row -> the token feed it was admitted with (None == empty row)
+        self.feeds = [None] * N_ROWS
+
+    # -- operations -----------------------------------------------------------
+
+    def op_alloc(self, row, tokens, shared):
+        """Admit ``tokens`` onto ``row`` (scheduler lifecycle: lifetime
+        claim, then index the prompt pages), privately or via the
+        sharing planner.  A plan that doesn't fit is a legal no-op —
+        that's the scheduler's FIFO backpressure."""
+        if self.feeds[row] is not None or not tokens:
+            return
+        need = min(len(tokens) + MAX_NEW - 1, MAX_LEN)
+        pool = self.pool
+        if shared:
+            if not pool.can_alloc_shared(need, tokens):
+                return
+            pages, s_tok, cow_pairs = pool.alloc_shared(row, need, tokens)
+            assert s_tok < len(tokens)      # never the whole prompt
+            for src, dst in cow_pairs:
+                assert src != dst
+                assert pool.refcount(dst) == 1     # no aliasing post-COW
+        else:
+            if not pool.can_alloc(need):
+                return
+            pages = pool.alloc(row, need)
+            for p in pages:
+                assert pool.refcount(p) == 1
+        self.feeds[row] = list(tokens)
+        pool.register_prefix(row, tokens)
+
+    def op_preempt(self, row):
+        """Evict a resident row — pages reclaim refcount-aware — then
+        re-admit the same feed through the sharing path (the scheduler's
+        preempt/re-admit cycle)."""
+        if self.feeds[row] is None:
+            return
+        tokens = self.feeds[row]
+        self.pool.free_row(row)
+        self.feeds[row] = None
+        self.check()
+        self.op_alloc(row, tokens, shared=True)
+
+    def op_free(self, row):
+        if self.feeds[row] is None:
+            return
+        self.pool.free_row(row)
+        self.feeds[row] = None
+
+    def op_cow(self, row, logical):
+        if self.feeds[row] is None:
+            return
+        pages = self.pool.row_pages(row)
+        if not pages:
+            return
+        logical %= len(pages)
+        if self.pool.refcount(pages[logical]) <= 1:
+            return                       # already private: cow is a no-op
+        if self.pool.pages_free == 0:
+            return                       # exhausted: cow would raise
+        src_ref = self.pool.refcount(pages[logical])
+        pair = self.pool.cow(row, logical)
+        assert pair is not None
+        src, dst = pair
+        assert src == pages[logical] and dst != src
+        assert self.pool.refcount(dst) == 1
+        assert self.pool.refcount(src) == src_ref - 1
+        assert self.pool.row_pages(row)[logical] == dst
+
+    def op_set_budget(self, n):
+        before = {r: self.pool.row_pages(r) for r in range(N_ROWS)}
+        self.pool.set_budget(n)
+        assert 1 <= self.pool.budget <= N_PAGES
+        # a shrink never evicts: every live row keeps its exact pages
+        for r, pages in before.items():
+            assert self.pool.row_pages(r) == pages
+
+    # -- invariants -----------------------------------------------------------
+
+    def check(self):
+        pool = self.pool
+        assert pool.conservation_ok()
+        entries = sum(len(pool.row_pages(r)) for r in range(N_ROWS))
+        refs = sum(pool.refcount(p) for p in range(1, N_PAGES + 1))
+        assert refs == entries
+        assert pool.pages_owned + pool.pages_shared == pool.pages_in_use
+        assert pool.refcount(NULL_PAGE) == 0
+        for r in range(N_ROWS):
+            pages = pool.row_pages(r)
+            assert NULL_PAGE not in pages
+            assert len(set(pages)) == len(pages)   # no self-aliasing
+            # a resident row always holds pages; an empty row holds none
+            assert (self.feeds[r] is None) == (len(pages) == 0)
+        assert 1 <= pool.budget <= N_PAGES
+
+
+if HAVE_HYPOTHESIS:
+
+    TOKENS = st.lists(st.integers(0, VOCAB - 1), min_size=1,
+                      max_size=MAX_LEN - 1)
+
+    class PoolMachine(RuleBasedStateMachine):
+        @initialize()
+        def setup(self):
+            self.d = PoolDriver()
+
+        @rule(row=st.integers(0, N_ROWS - 1), tokens=TOKENS,
+              shared=st.booleans())
+        def alloc(self, row, tokens, shared):
+            self.d.op_alloc(row, tokens, shared)
+
+        @rule(row=st.integers(0, N_ROWS - 1))
+        def free(self, row):
+            self.d.op_free(row)
+
+        @rule(row=st.integers(0, N_ROWS - 1))
+        def preempt(self, row):
+            self.d.op_preempt(row)
+
+        @rule(row=st.integers(0, N_ROWS - 1), logical=st.integers(0, 7))
+        def cow(self, row, logical):
+            self.d.op_cow(row, logical)
+
+        @rule(n=st.integers(-2, N_PAGES + 2))
+        def shrink_budget(self, n):
+            self.d.op_set_budget(n)
+
+        @invariant()
+        def conserved(self):
+            if hasattr(self, "d"):
+                self.d.check()
+
+    PoolMachine.TestCase.settings = settings(
+        settings.default, max_examples=40, stateful_step_count=50,
+        deadline=None)
+    TestPoolMachine = PoolMachine.TestCase
+    TestPoolMachine.pytestmark = [pytest.mark.slow]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_pool_random_walk_fallback(seed):
+    """Seeded fallback: the same operation mix as the state machine,
+    driven by a PRNG — runs in the fast lane and in environments
+    without hypothesis."""
+    rng = random.Random(seed)
+    d = PoolDriver()
+    for _ in range(400):
+        op = rng.randrange(6)
+        row = rng.randrange(N_ROWS)
+        if op in (0, 1):
+            tokens = [rng.randrange(VOCAB)
+                      for _ in range(rng.randrange(1, MAX_LEN))]
+            d.op_alloc(row, tokens, shared=bool(op))
+        elif op == 2:
+            d.op_free(row)
+        elif op == 3:
+            d.op_preempt(row)
+        elif op == 4:
+            d.op_cow(row, rng.randrange(8))
+        else:
+            d.op_set_budget(rng.randrange(-2, N_PAGES + 3))
+        d.check()
+    # drain: every page returns, the index empties with its pages
+    for r in range(N_ROWS):
+        d.op_free(r)
+    d.check()
+    assert d.pool.pages_in_use == 0
+    assert d.pool.pages_free == N_PAGES
+    assert d.pool.prefix_entries == 0

@@ -115,6 +115,34 @@ def test_null_page_contents_never_leak_into_output():
     assert jnp.array_equal(clean, poisoned)
 
 
+def test_aliased_page_tables_bit_exact_with_materialized_copies():
+    """The prefix-sharing contract: two rows whose tables point at the
+    SAME physical pages (refcounted prefix sharing) must produce output
+    bitwise identical to two rows reading private copies of those
+    pages.  Gathers are read-only, so aliasing is invisible to both the
+    kernel and the oracle — the scheduler's COW machinery exists purely
+    to keep *writes* off shared pages."""
+    key = jax.random.PRNGKey(21)
+    b, sq, hq, kv, hd, ps, ppr = 2, 4, 4, 2, 8, 8, 3
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, sq, hq, hd)).astype(jnp.bfloat16)
+    kp = jax.random.normal(kk, (8, ps, kv, hd)).astype(jnp.bfloat16)
+    vp = jax.random.normal(kv_, (8, ps, kv, hd)).astype(jnp.bfloat16)
+    # aliased: both rows share pages 1,2 for their prefix, own tails 3/4
+    pt_alias = jnp.asarray([[1, 2, 3], [1, 2, 4]], jnp.int32)
+    # materialized: row 1's prefix copied into private pages 5,6
+    kp_mat = kp.at[5].set(kp[1]).at[6].set(kp[2])
+    vp_mat = vp.at[5].set(vp[1]).at[6].set(vp[2])
+    pt_mat = jnp.asarray([[1, 2, 3], [5, 6, 4]], jnp.int32)
+    kv_len = jnp.asarray([ps * 3, ps * 3 - 2], jnp.int32)
+    q_off = kv_len - sq
+    for fn in (paged_attention_ref,
+               lambda *a: paged_attention(*a, interpret=True)):
+        aliased = fn(q, kp, vp, pt_alias, kv_len, q_off)
+        materialized = fn(q, kp_mat, vp_mat, pt_mat, kv_len, q_off)
+        assert jnp.array_equal(aliased, materialized)
+
+
 def test_shape_validation_errors():
     q, kp, vp, pt, kv_len, q_off = _case(jax.random.PRNGKey(1), 2, 4, 4,
                                          2, 8, 8, 3, n_pages=6,

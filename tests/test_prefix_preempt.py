@@ -1,0 +1,303 @@
+"""Prefix-shared copy-on-write KV pages + preemptive paged scheduling:
+end-to-end acceptance tests.
+
+The invariants this file pins are the PR's exit criteria:
+
+  * N requests with a common prompt head peak at strictly fewer
+    distinct pages than N private copies, with every token stream
+    bit-exact vs the dense-cache oracle;
+  * copy-on-write really protects the page owner: a request whose
+    prompt diverges INSIDE a shared page writes its own tokens into a
+    private copy, and the owner's stream is unchanged;
+  * under pool saturation with ``preemption=True``, higher-QoS arrivals
+    evict the lowest-QoS resident, the victim re-admits through
+    chunked prefill and completes its exact stream — zero drops, zero
+    retraces across the preempt/re-admit boundary;
+  * ``set_weights`` shrinking a tenant's page budget below its usage —
+    including refcounted shared pages — gates only NEW admissions, and
+    ``kv_report``/``qos_report`` distinguish owned vs shared pages.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import obs
+from repro.configs import get_config
+from repro.core.engine import EngineConfig
+from repro.core.quant import QuantConfig
+from repro.models.model import ModelConfig, build_model
+from repro.serve.engine import BatchScheduler, Request
+
+
+def _model(**overrides):
+    cfg = get_config("qwen3_4b", smoke=True)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def _prompt(seed, vocab, plen):
+    return jax.random.randint(jax.random.PRNGKey(seed), (plen,), 0,
+                              vocab - 1).astype(jnp.int32)
+
+
+def _serve_staggered(sched, reqs, stagger, max_steps=400):
+    """Submit ``reqs`` in waves (``stagger[i]`` = step to submit request
+    i at — later waves can alias the prefix pages earlier waves
+    registered), drain, and track peak distinct pages + conservation.
+
+    Returns ``(streams, peak_pages, finished_requests)``.
+    """
+    pool = sched._lanes["A"].pool
+    done, finished = {}, []
+    peak = [0]
+    pending = sorted(zip(stagger, reqs), key=lambda x: x[0])
+    steps = 0
+    while (len(done) < len(reqs)) and steps < max_steps:
+        while pending and pending[0][0] <= steps:
+            sched.submit(pending.pop(0)[1])
+        for r in sched.step():
+            done[r.rid] = r.out
+            finished.append(r)
+        if pool is not None:
+            assert pool.conservation_ok()
+            peak[0] = max(peak[0], pool.pages_in_use)
+        steps += 1
+    assert len(done) == len(reqs), f"stalled: {len(done)}/{len(reqs)}"
+    return done, peak[0], finished
+
+
+# -- shared-prefix page savings, bit-exact ------------------------------------
+
+def test_shared_prefix_uses_fewer_pages_with_bit_exact_streams():
+    """Four requests sharing a 16-token head: the prefix-sharing pool
+    must peak strictly below the private-pages baseline while every
+    stream matches the dense oracle token-for-token."""
+    cfg, m, params = _model()
+    head = _prompt(777, cfg.vocab, 16)
+    prompts = [jnp.concatenate([head, _prompt(900 + i, cfg.vocab, 4 + 2 * i)])
+               for i in range(4)]
+    # request 0 prefills and registers its pages first (plen 20, chunk 4
+    # -> 5 steps); the rest arrive after and can alias the head
+    stagger = [0, 6, 6, 6]
+    arms = {}
+    peaks = {}
+    for name, kw in (("dense", dict(kv="dense")),
+                     ("private", dict(kv="paged", page_size=8)),
+                     ("shared", dict(kv="paged", page_size=8,
+                                     prefix_share=True))):
+        if name == "shared":
+            obs.reset()
+        sched = BatchScheduler(m, params, n_slots=4, max_len=32, **kw)
+        reqs = [Request(rid=i, prompt=p, max_new=4)
+                for i, p in enumerate(prompts)]
+        arms[name], peaks[name], _ = _serve_staggered(sched, reqs, stagger)
+        if name == "shared":
+            assert sched.metrics.total("serve_kv_pages_shared_total",
+                                       tenant="A") >= 2 * 3
+            assert sched.metrics.total("serve_kv_shared_tokens_total",
+                                       tenant="A") >= 16 * 3
+            pool = sched._lanes["A"].pool
+            assert pool.pages_in_use == 0       # fully drained
+            assert pool.prefix_entries == 0     # index left with pages
+            reg = obs.registry()
+            assert reg.total("serve_jit_traces_total",
+                             closure="decode", tenant="A") == 1
+            assert reg.total("serve_jit_retraces_total") == 0
+    assert arms["shared"] == arms["dense"]
+    assert arms["private"] == arms["dense"]
+    assert peaks["shared"] < peaks["private"]
+
+
+def test_cow_protects_the_owner_on_sub_page_divergence():
+    """Request 1 matches request 0's prompt for 12 of 16 tokens —
+    divergence INSIDE the second page.  The pool aliases the page and
+    privatizes it copy-on-write before request 1's own tokens land, so
+    request 0 (still decoding from the original page) keeps its exact
+    dense-oracle stream.  Without the copy this corrupts r0's cache."""
+    cfg, m, params = _model()
+    p0 = _prompt(42, cfg.vocab, 16)
+    p1 = jnp.concatenate([p0[:12], _prompt(43, cfg.vocab, 8)])
+    stagger = [0, 5]            # r0's prefill (4 steps) completes first
+    arms = {}
+    for name, kw in (("dense", dict(kv="dense")),
+                     ("shared", dict(kv="paged", page_size=8,
+                                     prefix_share=True))):
+        sched = BatchScheduler(m, params, n_slots=2, max_len=32, **kw)
+        reqs = [Request(rid=0, prompt=p0, max_new=12),
+                Request(rid=1, prompt=p1, max_new=6)]
+        arms[name], _, _ = _serve_staggered(sched, reqs, stagger)
+        if name == "shared":
+            assert sched.metrics.total("serve_kv_cow_total",
+                                       tenant="A") == 1
+            assert sched.metrics.total("serve_kv_shared_tokens_total",
+                                       tenant="A") == 12
+    assert arms["shared"] == arms["dense"]
+
+
+# -- preemption under saturation ----------------------------------------------
+
+def test_preemption_admits_high_qos_and_drops_nothing():
+    """A pool sized for ~2 resident requests, 4 slots: two low-QoS
+    requests saturate it, two high-QoS arrivals preempt one of them,
+    the victims re-admit when pages free up, and all four complete
+    their exact dense-oracle streams — zero drops, zero retraces."""
+    cfg, m, params = _model()
+    prompts = [_prompt(500 + i, cfg.vocab, 20) for i in range(4)]
+    qos = (1.0, 1.0, 4.0, 4.0)
+
+    def reqs():
+        return [Request(rid=i, prompt=p, max_new=5, qos=q)
+                for i, (p, q) in enumerate(zip(prompts, qos))]
+
+    dense = BatchScheduler(m, params, n_slots=4, max_len=32, kv="dense")
+    ref, _, _ = _serve_staggered(dense, reqs(), [0, 0, 0, 0])
+
+    obs.reset()
+    sched = BatchScheduler(m, params, n_slots=4, max_len=32, page_size=8,
+                           kv_pages=8, preemption=True)
+    # low-QoS pair first: by the time the high-QoS pair arrives they
+    # hold 6 of 8 pages and are mid-decode
+    done, _, finished = _serve_staggered(sched, reqs(), [0, 0, 8, 8])
+    assert done == ref
+    preempted = [r for r in finished if r.preemptions]
+    assert preempted and all(r.qos == 1.0 for r in preempted)
+    assert sched.metrics.total("serve_preemptions_total",
+                               tenant="A") == sum(
+        r.preemptions for r in finished)
+    pool = sched._lanes["A"].pool
+    assert pool.pages_in_use == 0 and pool.conservation_ok()
+    reg = obs.registry()
+    assert reg.total("serve_jit_traces_total",
+                     closure="decode", tenant="A") == 1
+    assert reg.total("serve_jit_retraces_total") == 0
+
+
+def test_preemption_without_higher_qos_keeps_fifo():
+    """Equal QoS everywhere: preemption must never fire (strictly-lower
+    rule), degrading to the ordinary FIFO backpressure."""
+    cfg, m, params = _model()
+    prompts = [_prompt(520 + i, cfg.vocab, 20) for i in range(3)]
+    sched = BatchScheduler(m, params, n_slots=4, max_len=32, page_size=8,
+                           kv_pages=8, preemption=True)
+    reqs = [Request(rid=i, prompt=p, max_new=5) for i, p in
+            enumerate(prompts)]
+    done, _, finished = _serve_staggered(sched, reqs, [0, 0, 0])
+    assert all(r.preemptions == 0 for r in finished)
+    assert sched.metrics.total("serve_preemptions_total", tenant="A") == 0
+
+
+def test_preempted_request_reshares_its_prefix_on_readmission():
+    """prefix_share + preemption compose: the victim's head pages stay
+    alive through the other sharer's refcount, so its re-admission
+    aliases them again instead of re-prefilling — and every stream
+    still matches the dense oracle."""
+    cfg, m, params = _model()
+    head = _prompt(600, cfg.vocab, 16)
+    p0 = jnp.concatenate([head, _prompt(601, cfg.vocab, 4)])
+    p1 = jnp.concatenate([head, _prompt(602, cfg.vocab, 4)])
+    # small enough (1 page) that ONE eviction admits it — the other
+    # sharer stays resident, keeping the head pages alive and indexed
+    p2 = _prompt(603, cfg.vocab, 4)
+
+    def reqs():
+        return [Request(rid=0, prompt=p0, max_new=12, qos=1.0),
+                Request(rid=1, prompt=p1, max_new=12, qos=1.0),
+                Request(rid=2, prompt=p2, max_new=5, qos=4.0)]
+
+    stagger = [0, 6, 9]
+    dense = BatchScheduler(m, params, n_slots=3, max_len=32, kv="dense")
+    ref, _, _ = _serve_staggered(dense, reqs(), stagger)
+
+    sched = BatchScheduler(m, params, n_slots=3, max_len=32, page_size=8,
+                           kv_pages=6, prefix_share=True, preemption=True)
+    done, _, finished = _serve_staggered(sched, reqs(), stagger)
+    assert done == ref
+    assert sched.metrics.total("serve_preemptions_total", tenant="A") >= 1
+    # head shared at the follower's first admission AND again when the
+    # victim re-admitted: >= 2 shared-page events of 2 pages each
+    assert sched.metrics.total("serve_kv_pages_shared_total",
+                               tenant="A") >= 4
+    victim = [r for r in finished if r.preemptions]
+    # the victim aliased the head at its first admission AND at
+    # re-admission: 16 shared positions each time
+    assert victim and any(r.shared_tokens >= 32 for r in victim)
+
+
+# -- set_weights x shared pages (multi-tenant) --------------------------------
+
+TINY = ModelConfig(
+    name="tiny", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv=2, head_dim=16, d_ff=64, vocab=128, backend="crossbar",
+    dtype=jnp.float32,
+    xbar=EngineConfig(tile_rows=32, tile_cols=32, mode="deepnet",
+                      quant=QuantConfig(w_bits=4, in_bits=6, adc_bits=12)))
+
+
+def test_set_weights_budget_shrink_below_shared_usage_gates_new_only():
+    """Shrinking tenant B's page budget below its pages_in_use while
+    some of those pages are refcounted (shared) must not evict anything:
+    resident requests keep decoding on their exact pages, only NEW
+    admissions gate, and the reports split owned vs shared."""
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = BatchScheduler(model, params, n_slots=2, max_len=16,
+                           tenants={"A": params, "B": params},
+                           page_size=4, kv_pages=8, prefix_share=True)
+    head = _prompt(700, TINY.vocab, 8)
+    b0 = Request(rid=0, prompt=head, max_new=6, model_id="B")
+    sched.submit(b0)
+    for _ in range(3):                     # prefill (2 chunks) + register
+        sched.step()
+    b1 = Request(rid=1, prompt=jnp.concatenate(
+        [head, _prompt(701, TINY.vocab, 2)]), max_new=6, model_id="B")
+    sched.submit(b1)
+    sched.step()
+    pool = sched._lanes["B"].pool
+    assert pool.pages_shared == 2          # b1 aliased b0's head pages
+    used = pool.pages_in_use
+    pages_before = {r: pool.row_pages(r) for r in range(2)}
+    sched.set_weights({"A": 3.0, "B": 1.0})
+    assert pool.budget < used              # shrunk below live usage
+    # nothing evicted: both residents keep their exact pages and emit
+    out0, out1 = len(b0.out), len(b1.out)
+    sched.step()
+    assert {r: pool.row_pages(r) for r in range(2)} == pages_before
+    assert len(b0.out) == out0 + 1 and len(b1.out) == out1 + 1
+    rep = sched.kv_report()["B"]
+    assert rep["pages_in_use"] == used
+    assert rep["pages_shared"] == 2
+    assert rep["pages_owned"] == used - 2
+    qrep = sched.qos_report()["B"]
+    assert qrep["pages_shared"] == 2
+    assert qrep["pages_owned"] == used - 2
+    assert qrep["pages_in_use"] > qrep["page_budget"]
+    # a NEW admission is gated while usage exceeds the budget...
+    b2 = Request(rid=2, prompt=_prompt(702, TINY.vocab, 5), max_new=2,
+                 model_id="B")
+    sched.submit(b2)
+    sched.step()
+    assert b2 in sched._lanes["B"].queue   # queued, not dropped
+    # ...and admits once the residents drain under the new cap
+    done = {}
+    for _ in range(60):
+        for r in sched.step():
+            done[r.rid] = r.out
+        assert pool.conservation_ok()
+        if len(done) == 3:
+            break
+    assert set(done) == {0, 1, 2}
+    assert pool.pages_in_use == 0
+
+
+def test_flags_require_paged_kv():
+    cfg, m, params = _model()
+    with pytest.raises(ValueError, match="paged"):
+        BatchScheduler(m, params, n_slots=2, max_len=32, kv="dense",
+                       prefix_share=True)
+    with pytest.raises(ValueError, match="paged"):
+        BatchScheduler(m, params, n_slots=2, max_len=32, kv="dense",
+                       preemption=True)
