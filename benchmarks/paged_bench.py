@@ -43,6 +43,16 @@ host stub) and replays them through chunked prefill.  Gates: all four
 requests complete with ZERO drops, streams bit-exact vs dense,
 >= 1 eviction, zero retrace delta, conservation + full reclaim.
 
+Phase 6 — long-context kernel sweep (the two-lane dispatch): the
+streamed online-softmax lane vs the gather-scratch lane at the kernel
+level over growing windows (16/32/64 pages of 8), full-depth decode
+reads.  Gates: streamed >= 1.0x scratch throughput at the LONGEST
+window, streamed VMEM scratch bytes CONSTANT across all windows (the
+O(page_block) claim; the scratch lane's grow linearly), bounded-ulp
+parity (fp32 maxdiff < 1e-5) with stable argmax, and ZERO
+``paged_fallback`` dispatches — the no-silent-fallback counter wired
+straight into the exit code.
+
 CLI: ``python benchmarks/paged_bench.py --json BENCH_paged.json`` (exits
 nonzero if any gate fails).
 """
@@ -358,6 +368,82 @@ def _preempt_phase():
     }
 
 
+def _longctx_phase(windows=(16, 32, 64), repeats=3):
+    """Kernel-level two-lane sweep over growing page-table widths: every
+    row reads its full window (the decode worst case), both lanes timed
+    back-to-back on identical operands."""
+    import numpy as np
+
+    from repro.kernels.paged_attention import (
+        paged_attention as paged_op, paged_path_calls,
+        scratch_lane_vmem_bytes, streamed_lane_vmem_bytes)
+
+    b, sq, hq, kv, hd, ps, bp = 4, 1, 8, 2, 64, _PAGE_SIZE, 16
+    base = dict(paged_path_calls)
+    rows, argmax_stable = [], True
+    for p_seq in windows:
+        key = jax.random.PRNGKey(p_seq)
+        kq, kk, kvk = jax.random.split(key, 3)
+        q = jax.random.normal(kq, (b, sq, hq, hd), jnp.float32)
+        n_pages = b * p_seq + 1
+        kp = jax.random.normal(kk, (n_pages, ps, kv, hd), jnp.float32)
+        vp = jax.random.normal(kvk, (n_pages, ps, kv, hd), jnp.float32)
+        pt = (jnp.arange(1, b * p_seq + 1, dtype=jnp.int32)
+              .reshape(b, p_seq))
+        kv_len = jnp.full((b,), p_seq * ps, jnp.int32)
+        q_off = kv_len - sq
+
+        def run(lane):
+            return paged_op(q, kp, vp, pt, kv_len, q_off, lane=lane,
+                            block_pages=bp)
+
+        timed = {}
+        outs = {}
+        for lane in ("streamed", "scratch"):
+            outs[lane] = jax.block_until_ready(run(lane))   # trace + warm
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(run(lane))
+                best = min(best, time.perf_counter() - t0)
+            timed[lane] = best * 1e6
+        d_str = np.asarray(outs["streamed"], np.float32)
+        d_scr = np.asarray(outs["scratch"], np.float32)
+        argmax_stable = argmax_stable and bool(
+            (d_str.reshape(b, -1).argmax(-1)
+             == d_scr.reshape(b, -1).argmax(-1)).all())
+        rows.append({
+            "pages": p_seq,
+            "tokens": p_seq * ps,
+            "streamed_us_per_call": timed["streamed"],
+            "scratch_us_per_call": timed["scratch"],
+            "streamed_over_scratch":
+                timed["scratch"] / max(timed["streamed"], 1e-9),
+            "parity_maxdiff": float(np.abs(d_str - d_scr).max()),
+            "scratch_lane_vmem_bytes":
+                scratch_lane_vmem_bytes(p_seq, ps, kv, hd, jnp.float32),
+            "streamed_lane_vmem_bytes":
+                streamed_lane_vmem_bytes(b, sq, hq, kv, hd, p_seq, ps, bp,
+                                         jnp.float32),
+        })
+    calls = {k: paged_path_calls[k] - base[k] for k in base}
+    return {
+        "batch": b, "page_size": ps, "block_pages": bp,
+        "kv_heads": kv, "head_dim": hd,
+        "windows": rows,
+        "streamed_vmem_constant":
+            len({r["streamed_lane_vmem_bytes"] for r in rows}) == 1,
+        "scratch_vmem_growth":
+            rows[-1]["scratch_lane_vmem_bytes"]
+            / rows[0]["scratch_lane_vmem_bytes"],
+        "ratio_at_longest": rows[-1]["streamed_over_scratch"],
+        "parity_maxdiff": max(r["parity_maxdiff"] for r in rows),
+        "argmax_stable": argmax_stable,
+        "dispatch_calls": calls,
+        "fallback_delta": calls["paged_fallback"],
+    }
+
+
 def bench_paged(quick: bool = False):
     max_new = 5 if quick else 10
     steps, repeats = (25, 3) if quick else (50, 5)
@@ -368,6 +454,9 @@ def bench_paged(quick: bool = False):
     swap = _swap_phase(max_new)
     prefix = _prefix_phase()
     preempt = _preempt_phase()
+    longctx = _longctx_phase(windows=(16, 32, 64) if quick
+                             else (16, 32, 64, 128),
+                             repeats=3 if quick else 5)
 
     return {
         "us_per_call": 0.0,
@@ -391,6 +480,7 @@ def bench_paged(quick: bool = False):
         "swap": swap,
         "prefix_share": prefix,
         "preemption": preempt,
+        "longctx": longctx,
     }
 
 
@@ -398,6 +488,7 @@ def accepted(res) -> bool:
     swap = res["swap"]
     pfx = res["prefix_share"]
     pre = res["preemption"]
+    lc = res["longctx"]
     return (res["paged_completed"] == res["n_requests"]
             and res["dense_completed"] == res["n_requests"]
             and res["paged_vs_dense_bit_exact"]
@@ -430,7 +521,15 @@ def accepted(res) -> bool:
             and all(a["conservation_every_step"]
                     and a["retrace_delta"] == 0
                     and a["pages_in_use_at_drain"] == 0
-                    for a in pre["arms"].values()))
+                    for a in pre["arms"].values())
+            # long-context two-lane sweep: the streamed lane must win at
+            # the longest window from CONSTANT VMEM scratch, within the
+            # bounded-ulp contract, with zero silent fallbacks
+            and lc["ratio_at_longest"] >= 1.0
+            and lc["streamed_vmem_constant"]
+            and lc["parity_maxdiff"] < 1e-5
+            and lc["argmax_stable"]
+            and lc["fallback_delta"] == 0)
 
 
 def main(argv=None):
@@ -472,6 +571,16 @@ def main(argv=None):
           f"{pre['preemptions']} evictions, "
           f"{pre['arms']['preempt']['completed']}/{pre['n_requests']} "
           f"completed with 0 drops")
+    lc = res["longctx"]
+    print(f"# long-context: streamed/scratch "
+          f"{lc['ratio_at_longest']:.2f}x at "
+          f"{lc['windows'][-1]['tokens']} tokens (gate >= 1.0), streamed "
+          f"VMEM constant ({lc['streamed_vmem_constant']}: "
+          f"{lc['windows'][0]['streamed_lane_vmem_bytes']} B) vs scratch "
+          f"x{lc['scratch_vmem_growth']:.0f} growth, parity maxdiff "
+          f"{lc['parity_maxdiff']:.2e} (gate < 1e-5), argmax stable "
+          f"({lc['argmax_stable']}), fallbacks {lc['fallback_delta']} "
+          f"(want 0)")
     return 0 if ok else 1
 
 

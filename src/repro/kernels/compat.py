@@ -5,6 +5,11 @@ newer JAX releases (and the old name later removed).  All kernels build
 their compiler params through :func:`tpu_compiler_params` so either JAX
 works unchanged.  :func:`smem_scalar_spec` papers over the BlockSpec
 ``memory_space`` keyword (absent in older JAX) for (1, 1) scalar operands.
+:func:`prefetch_grid_spec` wraps ``pltpu.PrefetchScalarGridSpec`` (the
+scalar-prefetch grid the streamed paged-attention kernel rides) with a
+plain-``GridSpec`` fallback so a JAX without the TPU-only spec — or the
+CPU interpreter of a future JAX that drops it — still runs the same
+kernel body unchanged.
 """
 from __future__ import annotations
 
@@ -30,3 +35,39 @@ def smem_scalar_spec(index_map):
         return pl.BlockSpec((1, 1), index_map, memory_space=pltpu.SMEM)
     except (TypeError, AttributeError):
         return pl.BlockSpec((1, 1), index_map)
+
+
+def prefetch_grid_spec(*, num_scalar_prefetch: int, grid, in_specs,
+                       out_specs, scratch_shapes, scalar_shapes,
+                       force_fallback: bool = False) -> dict:
+    """``pl.pallas_call`` kwargs for a scalar-prefetch grid.
+
+    Primary path: ``pltpu.PrefetchScalarGridSpec`` — the first
+    ``num_scalar_prefetch`` operands land in SMEM before the grid runs,
+    every ``index_map`` receives them after the grid indices, and the
+    kernel body sees them as leading refs.  Fallback (a JAX without the
+    spec, or ``force_fallback=True`` in tests): a plain grid where the
+    scalar operands ride as ordinary full-array inputs with constant
+    index maps.  The fallback is only sound for kernels that read the
+    scalars *in the body* (not in index maps) and whose index maps
+    tolerate the extra trailing args (write them ``lambda j, *_:``) —
+    the streamed paged-attention kernel is written to that discipline,
+    so both paths run the identical body.
+
+    ``scalar_shapes``: the full shapes of the ``num_scalar_prefetch``
+    leading operands, in order (the fallback needs them to build the
+    constant-block specs; the primary path ignores them).
+    """
+    if len(scalar_shapes) != num_scalar_prefetch:
+        raise ValueError(f"scalar_shapes has {len(scalar_shapes)} entries "
+                         f"for num_scalar_prefetch={num_scalar_prefetch}")
+    if not force_fallback and hasattr(pltpu, "PrefetchScalarGridSpec"):
+        return dict(grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=num_scalar_prefetch, grid=grid,
+            in_specs=list(in_specs), out_specs=out_specs,
+            scratch_shapes=list(scratch_shapes)))
+    scalar_specs = [
+        pl.BlockSpec(tuple(shape), lambda *_, _n=len(shape): (0,) * _n)
+        for shape in scalar_shapes]
+    return dict(grid=grid, in_specs=scalar_specs + list(in_specs),
+                out_specs=out_specs, scratch_shapes=list(scratch_shapes))

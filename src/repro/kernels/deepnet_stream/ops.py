@@ -35,6 +35,14 @@ def stream_linear(x, w, cfg):
     k, n = w.shape
     x_int = _pad_axis(x_int.astype(jnp.int32), rows, axis=-1)
     w_p = _pad_axis(w.astype(jnp.float32), rows, axis=0)
+    # widen the streamed weight tile to four row groups per fetch (the
+    # double-buffered plane-read window: Pallas prefetches the next
+    # block_k-deep tile while the current one's conversions run).  The
+    # zero rows padding adds contribute exact zeros through quantize ->
+    # MAC -> ADC, so the widened layout stays value-identical.
+    block_k = 4 * rows if x_int.shape[1] > rows else rows
+    x_int = _pad_axis(x_int, block_k, axis=-1)
+    w_p = _pad_axis(w_p, block_k, axis=0)
 
     block_b = min(128, max(8, x_int.shape[0]))
     block_n = min(128, n)
@@ -48,7 +56,7 @@ def stream_linear(x, w, cfg):
         x_pad, w_p, s_pad, w_bits=q.w_bits, in_bits=q.in_bits,
         adc_bits=q.adc_bits, bits_per_cell=q.bits_per_cell,
         rows_per_adc=rows, block_b=block_b, block_n=block_n,
-        interpret=cfg.interpret)
+        block_k=block_k, interpret=cfg.interpret)
 
     y = y[: xb.shape[0], : n] * x_scale * w_scale[..., :n]
     return y.reshape(*lead, n)

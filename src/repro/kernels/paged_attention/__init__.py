@@ -1,13 +1,35 @@
-"""Paged ragged decode attention: Pallas kernel + pure-jnp oracle.
+"""Paged ragged decode attention: two Pallas lanes + pure-jnp oracles.
 
-``paged_attention`` (ops.py) gathers each row's K/V through its page
-table and runs grouped SDPA with per-row lengths and causal offsets —
-the kernel behind ``AttnConfig.paged_kernel``.  ``paged_attention_ref``
-(ref.py) is the standalone oracle the interpret-mode CI pins the kernel
-against, bit-exactly; both are bit-exact vs the dense ``_sdpa`` path at
-equal cache contents (tests/test_paged_attention.py).
+``paged_attention`` (ops.py) is the dispatching entry point: the
+gather-then-SDPA **scratch** lane (bitwise vs ``paged_attention_ref``
+and the dense ``_sdpa`` path — the small-window fast path and oracle)
+and the block-streamed online-softmax **streamed** lane
+(``paged_attention_streamed``: scalar-prefetch page table,
+double-buffered page-block prefetch, O(block_pages) VMEM — bounded-ulp
++ argmax-stable vs the scratch lane, pinned against its own block-order
+oracle ``paged_attention_streamed_ref``).  Dispatches land in
+``crossstack_dispatch_total{path=paged_*}``; ``paged_path_calls`` is
+the summed view (tests/test_paged_attention.py,
+tests/test_paged_streamed.py).
 """
-from repro.kernels.paged_attention.ops import paged_attention
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.kernel import (
+    paged_attention_streamed,
+    resolve_block_pages,
+    scratch_lane_vmem_bytes,
+    streamed_lane_vmem_bytes,
+)
+from repro.kernels.paged_attention.ops import (
+    paged_attention,
+    paged_path_calls,
+)
+from repro.kernels.paged_attention.ref import (
+    paged_attention_ref,
+    paged_attention_streamed_ref,
+)
 
-__all__ = ["paged_attention", "paged_attention_ref"]
+__all__ = [
+    "paged_attention", "paged_attention_ref", "paged_attention_streamed",
+    "paged_attention_streamed_ref", "paged_path_calls",
+    "resolve_block_pages", "scratch_lane_vmem_bytes",
+    "streamed_lane_vmem_bytes",
+]

@@ -1,6 +1,8 @@
-"""Pallas kernel: paged ragged decode attention.
+"""Pallas kernels: paged ragged decode attention, two lanes.
 
-Grid = (batch,): each step serves ONE sequence row.  Inside the body:
+**Scratch lane** (``paged_attention_kernel``, the small-window fast path
+and the bitwise oracle) — grid = (batch,): each step serves ONE sequence
+row.  Inside the body:
 
   * the row's page table (a (1, P_seq) int32 operand) drives a staticly
     unrolled gather — each logical page is a dynamic-index load from the
@@ -24,12 +26,35 @@ scheduler's copy-on-write keeps *writes* off shared pages before this
 kernel ever runs (docs/KERNELS.md).
 
 VMEM budget per step (one row): the gathered K+V views dominate at
-2 * max_len * kv_heads * head_dim elements — at the serving tier's
-decode shapes (max_len <= a few k, GQA'd kv_heads) this is well under
-the 16 MB v5e budget.  TPU porting notes live in docs/KERNELS.md: the
-gather loop wants scalar-prefetch (PrefetchScalarGridSpec) so page ids
-are known before the DMA, and a production flash-style online-softmax
-variant would trade the bitwise-equality contract for O(page) memory.
+2 * max_len * kv_heads * head_dim elements — peak scratch grows
+LINEARLY with the window (``scratch_lane_vmem_bytes``), which is what
+caps this lane at short windows.
+
+**Streamed lane** (``paged_attention_streamed``, the long-context path)
+— a block-streamed online-softmax (flash-style) kernel.  Grid =
+(n_page_blocks,) with the whole batch folded into each block step; the
+page table, fill lengths and query offsets arrive as *scalar-prefetch*
+operands (``compat.prefetch_grid_spec`` →
+``pltpu.PrefetchScalarGridSpec``; on TPU the table is in SMEM before
+the first DMA issues).  Each step gathers ONE page block of K/V into a
+two-slot VMEM scratch ring — block j+1 prefetches into the other slot
+while block j is attended (double-buffering: on TPU the gather DMA
+overlaps the MXU dots; the interpreter preserves the schedule) — and
+folds it into running max / denominator / accumulator scratch carried
+across grid steps.  Peak VMEM is O(block_pages)
+(``streamed_lane_vmem_bytes``), INDEPENDENT of window length.
+
+Numerics contract per lane: the scratch lane is bitwise vs ref.py and
+the dense ``_sdpa`` (the paged≡dense stream oracle).  The streamed lane
+reassociates the softmax reduction (one block at a time), so bitwise
+equality with the one-shot order is unattainable *by construction* —
+and empirically even a jitted same-order jnp replica of the block
+recursion drifts 1–2 ulp vs the in-kernel execution (XLA fuses the
+multiply-adds differently inside the Pallas interpreter than in a plain
+jit graph).  Its contract is therefore **bounded-ulp + argmax-stable**:
+``|streamed − scratch| <= ~1e-6`` relative at fp32 and the argmax over
+the head dim never moves (tests/test_paged_streamed.py pins both, plus
+its own block-order oracle ``ref.paged_attention_streamed_ref``).
 """
 from __future__ import annotations
 
@@ -40,7 +65,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.compat import smem_scalar_spec, tpu_compiler_params
+from repro.kernels.compat import (prefetch_grid_spec, smem_scalar_spec,
+                                  tpu_compiler_params)
 
 
 def _kernel(pt_ref, len_ref, off_ref, q_ref, k_ref, v_ref, out_ref,
@@ -122,3 +148,168 @@ def paged_attention_kernel(q, k_pages, v_pages, page_table, kv_len,
       kv_len.astype(jnp.int32).reshape(b, 1),
       q_offset.astype(jnp.int32).reshape(b, 1),
       q, k_pages, v_pages)
+
+
+# -- streamed lane: block-streamed online softmax ---------------------------
+
+
+def _stream_body(pt_ref, len_ref, off_ref, q_ref, k_ref, v_ref, out_ref,
+                 ks_ref, vs_ref, m_ref, l_ref, acc_ref, *, page_size: int,
+                 block_pages: int, n_blocks: int, causal: bool):
+    """One grid step = one page block for the WHOLE batch.
+
+    Scratch refs carried across steps: ``ks/vs`` — the (2, B, block_tok,
+    kv, hd) double-buffer ring; ``m/l`` — running max / denominator
+    (B, kv, g, sq) in f32; ``acc`` — the unnormalized output accumulator
+    (B, kv, g, sq, hd) in f32.  Step j attends the block prefetched at
+    step j−1 (slot j % 2) while prefetching block j+1 into the other
+    slot; the final step divides ``acc / l`` and writes the output.
+    """
+    j = pl.program_id(0)
+    ps, bp = page_size, block_pages
+    bt = bp * ps                                   # tokens per block
+    b = q_ref.shape[0]
+
+    def gather(jb, slot):
+        # one-shot gather: B*bp page ids -> one XLA gather of the pool
+        # (the unrolled per-page dynamic slices of the scratch lane cost
+        # O(pages) kernel ops; this is O(1) ops per block)
+        ptj = pt_ref[:, pl.ds(jb * bp, bp)].reshape(-1)
+        kk = k_ref[...][ptj].reshape(b, bt, *k_ref.shape[2:])
+        vv = v_ref[...][ptj].reshape(b, bt, *v_ref.shape[2:])
+        ks_ref[pl.ds(slot, 1)] = kk[None]
+        vs_ref[pl.ds(slot, 1)] = vv[None]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        gather(0, 0)                               # prime slot 0
+
+    @pl.when(j + 1 < n_blocks)
+    def _prefetch():                               # double-buffer: next
+        gather(j + 1, (j + 1) % 2)                 # block -> other slot
+
+    cur = j % 2
+    kk = ks_ref[pl.ds(cur, 1)][0]                  # (B, bt, kv, hd)
+    vv = vs_ref[pl.ds(cur, 1)][0]
+    q = q_ref[...]
+    if kk.dtype != q.dtype:   # low-precision (fp8) cache: upcast in-dot
+        kk = kk.astype(q.dtype)
+        vv = vv.astype(q.dtype)
+    _, sq, hq, hd = q.shape
+    kv = kk.shape[2]
+    g = hq // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, kk,
+                        preferred_element_type=jnp.float32) * scale
+    tpos = j * bt + jnp.arange(bt)                 # absolute KV positions
+    if causal:
+        qpos = off_ref[:, 0][:, None] + jnp.arange(sq)[None]
+        mask = qpos[:, :, None] >= tpos[None, None, :]
+        logits = jnp.where(mask[:, None, None], logits, -1e30)
+    valid = tpos[None, :] < len_ref[:, 0][:, None]
+    logits = jnp.where(valid[:, None, None, None], logits, -1e30)
+    # online softmax: rescale the running sums by exp(m_old - m_new)
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, logits.max(axis=-1))
+    alpha = jnp.exp(m_old - m_new)
+    p = jnp.exp(logits - m_new[..., None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + jnp.einsum(
+        "bkgst,btkh->bkgsh", p, vv.astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        out = acc_ref[...] / l_ref[...][..., None]
+        out_ref[...] = out.transpose(0, 3, 1, 2, 4).reshape(
+            b, sq, hq, hd).astype(out_ref.dtype)
+
+
+def resolve_block_pages(pages_per_seq: int, block_pages: int) -> int:
+    """Largest divisor of ``pages_per_seq`` that is <= ``block_pages``
+    (the grid needs equal blocks; the serving tier's pages_per_seq is a
+    power of two in practice, so this is usually ``block_pages`` itself)."""
+    bp = max(1, min(block_pages, pages_per_seq))
+    while pages_per_seq % bp:
+        bp -= 1
+    return bp
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "interpret", "block_pages", "force_compat_fallback"))
+def paged_attention_streamed(q, k_pages, v_pages, page_table, kv_len,
+                             q_offset, *, causal: bool = True,
+                             interpret: bool = True, block_pages: int = 16,
+                             force_compat_fallback: bool = False):
+    """Streamed-lane entry point; same signature/contract surface as
+    ``paged_attention_kernel`` plus ``block_pages`` (pages per streamed
+    block; clamped to a divisor of the table width).
+
+    ``force_compat_fallback`` routes through the plain-GridSpec shim
+    path even when ``PrefetchScalarGridSpec`` exists (compat test hook).
+    """
+    b, sq, hq, hd = q.shape
+    p1, ps, kv, _ = k_pages.shape
+    p_seq = page_table.shape[1]
+    bp = resolve_block_pages(p_seq, block_pages)
+    n_blocks = p_seq // bp
+    g = hq // kv
+    grid_kwargs = prefetch_grid_spec(
+        num_scalar_prefetch=3,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((b, sq, hq, hd), lambda j, *_: (0, 0, 0, 0)),
+            pl.BlockSpec((p1, ps, kv, hd), lambda j, *_: (0, 0, 0, 0)),
+            pl.BlockSpec((p1, ps, kv, hd), lambda j, *_: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, sq, hq, hd), lambda j, *_: (0, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, b, bp * ps, kv, hd), k_pages.dtype),
+            pltpu.VMEM((2, b, bp * ps, kv, hd), v_pages.dtype),
+            pltpu.VMEM((b, kv, g, sq), jnp.float32),
+            pltpu.VMEM((b, kv, g, sq), jnp.float32),
+            pltpu.VMEM((b, kv, g, sq, hd), jnp.float32),
+        ],
+        scalar_shapes=[(b, p_seq), (b, 1), (b, 1)],
+        force_fallback=force_compat_fallback,
+    )
+    return pl.pallas_call(
+        functools.partial(_stream_body, page_size=ps, block_pages=bp,
+                          n_blocks=n_blocks, causal=causal),
+        out_shape=jax.ShapeDtypeStruct((b, sq, hq, hd), q.dtype),
+        interpret=interpret,
+        **grid_kwargs,
+    )(page_table.astype(jnp.int32),
+      kv_len.astype(jnp.int32).reshape(b, 1),
+      q_offset.astype(jnp.int32).reshape(b, 1),
+      q, k_pages, v_pages)
+
+
+# -- peak-scratch accounting (the bench records these) ----------------------
+
+
+def scratch_lane_vmem_bytes(pages_per_seq: int, page_size: int, kv: int,
+                            hd: int, kv_dtype) -> int:
+    """Peak VMEM scratch of the gather-then-SDPA lane: the K+V logical
+    views, LINEAR in the window length."""
+    itemsize = jnp.dtype(kv_dtype).itemsize
+    return 2 * pages_per_seq * page_size * kv * hd * itemsize
+
+
+def streamed_lane_vmem_bytes(b: int, sq: int, hq: int, kv: int, hd: int,
+                             pages_per_seq: int, page_size: int,
+                             block_pages: int, kv_dtype) -> int:
+    """Peak VMEM scratch of the streamed lane: the two-slot K/V block
+    ring plus the f32 running max/denominator/accumulator — a function
+    of ``block_pages``, NOT of the window length."""
+    bp = resolve_block_pages(pages_per_seq, block_pages)
+    itemsize = jnp.dtype(kv_dtype).itemsize
+    g = hq // kv
+    ring = 2 * 2 * b * bp * page_size * kv * hd * itemsize
+    stats = (2 * b * kv * g * sq + b * kv * g * sq * hd) * 4
+    return ring + stats

@@ -1,12 +1,22 @@
-"""Reference paged decode attention (pure jnp): the oracle the Pallas
-kernel is pinned against, bit-for-bit, in interpret-mode CI.
+"""Reference paged decode attention (pure jnp): the oracles both kernel
+lanes are pinned against in interpret-mode CI.
 
-The math is the dense ``models/layers._sdpa`` decode path verbatim —
-same einsum contraction strings, same f32 accumulation, same -1e30
-mask constants — applied to the K/V view gathered through the page
-table.  Because ``page_size`` divides ``max_len``, the gathered view is
-exactly ``max_len`` deep, so equal cache contents give bit-identical
-logits, softmax weights, and outputs vs the dense cache path.
+``paged_attention_ref`` is the **scratch-lane** oracle, bit-for-bit:
+the dense ``models/layers._sdpa`` decode path verbatim — same einsum
+contraction strings, same f32 accumulation, same -1e30 mask constants —
+applied to the K/V view gathered through the page table.  Because
+``page_size`` divides ``max_len``, the gathered view is exactly
+``max_len`` deep, so equal cache contents give bit-identical logits,
+softmax weights, and outputs vs the dense cache path.
+
+``paged_attention_streamed_ref`` is the **streamed-lane** oracle: the
+same online-softmax block recursion as the streamed kernel body, one
+page block at a time in the same order with the same f32 running
+max/denominator/accumulator updates.  Its contract with the kernel is
+bounded-ulp, not bitwise — XLA reassociates the multiply-adds
+differently inside the Pallas interpreter than in a plain jit graph, so
+even this same-order replica lands 1–2 ulp off the kernel on ~1/3 of
+random cases (measured; see kernel.py's module docstring).
 """
 from __future__ import annotations
 
@@ -49,3 +59,55 @@ def paged_attention_ref(q, k_pages, v_pages, page_table, kv_len, q_offset,
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgst,btkh->bskgh", w.astype(gv.dtype), gv)
     return out.reshape(b, sq, hq, hd)
+
+
+def paged_attention_streamed_ref(q, k_pages, v_pages, page_table, kv_len,
+                                 q_offset, *, causal: bool = True,
+                                 block_pages: int = 16):
+    """Block-order online-softmax oracle for the streamed kernel lane:
+    the flash recursion in plain jnp, same block schedule, same update
+    order.  ``block_pages`` must match the kernel call being checked
+    (it is clamped to a divisor of the table width the same way)."""
+    from repro.kernels.paged_attention.kernel import resolve_block_pages
+
+    b, sq, hq, hd = q.shape
+    ps = k_pages.shape[1]
+    p_seq = page_table.shape[1]
+    bp = resolve_block_pages(p_seq, block_pages)
+    bt = bp * ps
+    kv = k_pages.shape[2]
+    g = hq // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    scale = hd ** -0.5
+    kv_len = jnp.asarray(kv_len).reshape(b)
+    q_offset = jnp.asarray(q_offset).reshape(b)
+    m = jnp.full((b, kv, g, sq), -1e30, jnp.float32)
+    l = jnp.zeros((b, kv, g, sq), jnp.float32)
+    acc = jnp.zeros((b, kv, g, sq, hd), jnp.float32)
+    for j in range(p_seq // bp):
+        ptj = page_table[:, j * bp:(j + 1) * bp].reshape(-1)
+        kk = k_pages[ptj].reshape(b, bt, kv, hd)
+        vv = v_pages[ptj].reshape(b, bt, kv, hd)
+        if kk.dtype != q.dtype:
+            kk = kk.astype(q.dtype)
+            vv = vv.astype(q.dtype)
+        logits = jnp.einsum("bskgh,btkh->bkgst", qg, kk,
+                            preferred_element_type=jnp.float32) * scale
+        tpos = j * bt + jnp.arange(bt)
+        if causal:
+            qpos = q_offset[:, None] + jnp.arange(sq)[None]
+            mask = qpos[:, :, None] >= tpos[None, None, :]
+            logits = jnp.where(mask[:, None, None], logits, -1e30)
+        valid = tpos[None, :] < kv_len[:, None]
+        logits = jnp.where(valid[:, None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkh->bkgsh", p, vv.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        m = m_new
+    out = acc / l[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, hd).astype(
+        q.dtype)

@@ -14,6 +14,12 @@ prompts of any length stream into the running batch as ``--chunk``-token
 prefill chunks through ONE compiled closure per tenant (no length
 buckets, zero re-traces for any prompt mix).  ``--kv dense`` keeps the
 per-slot dense cache — same closure and bit-identical streams.
+``--stream-pages N`` routes decode attention through the
+block-streamed online-softmax kernel lane once a row's page table is
+at least N pages wide (peak VMEM bounded by ``--block-pages``
+regardless of window length; bounded-ulp + argmax-stable vs the
+default bitwise gather-scratch lane) and prints the per-lane traced
+closure counts after the run.
 
 ``--hot-swap SPEC`` deploys a second checkpoint under live traffic
 (deep-net mode at the serving tier, serve/hotswap.py): the new weights
@@ -148,6 +154,16 @@ def main(argv=None):
     ap.add_argument("--chunk", type=int, default=4,
                     help="prompt tokens fed per step while a request "
                          "prefills inside the running decode batch")
+    ap.add_argument("--stream-pages", type=int, default=0, metavar="N",
+                    help="route paged decode attention through the "
+                         "block-streamed online-softmax kernel lane "
+                         "whenever a row's page table is >= N pages "
+                         "wide (0 = keep the bitwise gather-scratch "
+                         "lane; implies the paged Pallas kernel; "
+                         "requires --kv paged)")
+    ap.add_argument("--block-pages", type=int, default=16, metavar="N",
+                    help="pages fetched per streamed attention block "
+                         "(clamped to a divisor of the table width)")
     ap.add_argument("--prefix-share", action="store_true",
                     help="refcounted prefix sharing: requests whose "
                          "prompt head matches fully-written pages of a "
@@ -230,6 +246,9 @@ def main(argv=None):
     if (args.prefix_share or args.preemption) and args.kv != "paged":
         raise SystemExit("--prefix-share/--preemption operate on the "
                          "page pool; they require --kv paged")
+    if args.stream_pages and args.kv != "paged":
+        raise SystemExit("--stream-pages routes the paged-attention "
+                         "kernel; it requires --kv paged")
     mode_policy = parse_mode_policy(args.mode_policy)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -237,6 +256,10 @@ def main(argv=None):
         raise SystemExit("scheduler demo targets decoder LMs; "
                          "see examples/serve_batch.py for other families")
     cfg = dataclasses.replace(cfg, backend=args.backend)
+    if args.stream_pages:
+        cfg = dataclasses.replace(cfg, paged_kernel=True,
+                                  paged_stream_pages=args.stream_pages,
+                                  paged_block_pages=args.block_pages)
     if args.tile_rows is not None:
         cfg = dataclasses.replace(
             cfg, xbar=dataclasses.replace(cfg.xbar,
@@ -399,6 +422,15 @@ def main(argv=None):
     print(f"served {len(done)} requests, {total_tokens} tokens in "
           f"{steps} decode steps, {dt:.2f}s "
           f"({total_tokens / max(dt, 1e-9):.1f} tok/s)")
+    if args.stream_pages:
+        rep = sched.attn_lane_report()
+        d = rep["dispatch"]
+        print(f"attn lanes: streamed >= {rep['stream_min_pages']}p of "
+              f"{rep['pages_per_seq']}p table, "
+              f"block={rep['block_pages']}p; traced closures "
+              f"scratch={d['paged_scratch']} "
+              f"streamed={d['paged_streamed']} "
+              f"fallback={d['paged_fallback']}")
     if (args.prefix_share or args.preemption) and sched.metrics.enabled:
         reg = sched.metrics
         if args.prefix_share:

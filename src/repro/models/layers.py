@@ -132,6 +132,10 @@ class AttnConfig:
     chunk_unroll: bool = True   # unroll the q-chunk loop (see DESIGN §5)
     paged_kernel: bool = False  # paged decode via the Pallas kernel
     kernel_interpret: bool = True  # Pallas interpret mode (CPU container)
+    paged_stream_pages: int = 0  # stream the paged kernel (online-softmax
+    # block lane) when the page table is >= this many pages; 0 = always
+    # the gather-scratch lane (the bitwise small-window fast path)
+    paged_block_pages: int = 16  # pages per streamed block (VMEM knob)
 
     @property
     def kv_eff(self) -> int:
@@ -294,7 +298,9 @@ def attention(p, cfg: AttnConfig, x, positions, cache=None,
             from repro.kernels.paged_attention import paged_attention
             out = paged_attention(q, ck, cv, pt, new_len, pos,
                                   causal=cfg.causal,
-                                  interpret=cfg.kernel_interpret)
+                                  interpret=cfg.kernel_interpret,
+                                  stream_min_pages=cfg.paged_stream_pages,
+                                  block_pages=cfg.paged_block_pages)
         else:
             # gather width is exactly max_len (page_size | max_len), so
             # the SDPA below sees the same einsum shapes as the dense

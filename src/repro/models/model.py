@@ -64,6 +64,10 @@ class ModelConfig:
     # argument applied to the cache (§Perf)
     tie_embeddings: bool = False
     paged_kernel: bool = False     # paged decode via the Pallas kernel
+    paged_stream_pages: int = 0    # streamed-lane threshold in pages
+    # (>= this many table pages -> online-softmax block streaming; 0 =
+    # always the bitwise gather-scratch lane); see kernels/paged_attention
+    paged_block_pages: int = 16    # pages per streamed block
     backend: str = "digital"       # "digital" | "crossbar" (weight-resident)
     xbar: EngineConfig = EngineConfig(mode="deepnet")  # crossbar-backend cfg
 
@@ -79,7 +83,9 @@ class ModelConfig:
             rope_theta=self.rope_theta, kv_repeat=self.kv_repeat,
             mrope=(self.family == "vlm"), q_chunk=self.q_chunk,
             chunk_unroll=self.chunk_unroll,
-            paged_kernel=self.paged_kernel)
+            paged_kernel=self.paged_kernel,
+            paged_stream_pages=self.paged_stream_pages,
+            paged_block_pages=self.paged_block_pages)
 
     @property
     def moe(self) -> Optional[MoEConfig]:

@@ -976,6 +976,24 @@ class BatchScheduler:
                 for t, lane in sorted(self._lanes.items())
                 if lane.pool is not None}
 
+    def attn_lane_report(self) -> Dict[str, Any]:
+        """Which paged-attention lane the compiled closures dispatch,
+        plus the model's streaming configuration.  The dispatch counts
+        are the process-global trace-time counters
+        (``crossstack_dispatch_total{path=paged_*}``): one bump per
+        traced closure, so a serving run whose every closure streamed
+        shows ``paged_fallback == 0`` and ``paged_streamed >= 1`` — the
+        long-context bench's no-silent-fallback exit gate reads this.
+        """
+        from repro.kernels.paged_attention import paged_path_calls
+        cfg = self.model.cfg
+        return {"paged_kernel": bool(getattr(cfg, "paged_kernel", False)),
+                "stream_min_pages": int(
+                    getattr(cfg, "paged_stream_pages", 0)),
+                "block_pages": int(getattr(cfg, "paged_block_pages", 16)),
+                "pages_per_seq": self.pages_per_seq,
+                "dispatch": dict(paged_path_calls)}
+
     def mode_report(self, tenant: Optional[str] = None) -> Dict[str, Any]:
         """Per-weight read-mode choices and their IR-drop economics for
         a tenant's plane set (``CrossbarExecutor.mode_report``) — the

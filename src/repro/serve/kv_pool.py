@@ -19,16 +19,22 @@ exactly at every step:
     sum(refcounts)            == total page-table entries
 
 Prefix sharing: when a row's prompt finishes prefill, the pool indexes
-its fully-written whole pages under the *cumulative token tuple* they
-cover (page j of tokens T is keyed on ``T[:(j+1)*page_size]`` — the
-token-hash of the whole chain, so a hit guarantees the page's K/V
-content byte-for-byte: cache content is a deterministic function of the
-token prefix).  A later admission with a matching head aliases those
-pages instead of recomputing them.  Sharing always stops at least one
-token short of the prompt end (the final token must flow through the
-model to produce the first output logits), and a sub-page extension
-match (the next page's tokens agree for ``r < page_size`` positions) may
-alias one partial page.
+its fully-written whole pages under a **rolling chain key**
+``(parent_phys, page_tokens)`` — the physical id of the page's
+predecessor in the chain (-1 at the root) plus the ``page_size`` tokens
+the page itself covers.  The parent id was itself indexed under *its*
+whole chain, so by induction a hit still pins the page's K/V content
+byte-for-byte to the full cumulative token prefix (cache content is a
+deterministic function of the token prefix) — but each key hashes only
+``page_size`` tokens, making prompt indexing O(plen) total where the
+old cumulative-tuple keys (page j keyed on ``T[:(j+1)*page_size]``)
+cost O(plen²).  ``index_ops`` counts token positions hashed;
+tests/test_kv_pool.py pins the linear scaling.  A later admission with
+a matching head aliases indexed pages instead of recomputing them.
+Sharing always stops at least one token short of the prompt end (the
+final token must flow through the model to produce the first output
+logits), and a sub-page extension match (the next page's tokens agree
+for ``r < page_size`` positions) may alias one partial page.
 
 Copy-on-write: a row that would write its *own* tokens into a shared
 page (the partial-page cases above) privatizes it first — the pool
@@ -80,16 +86,26 @@ class PagedKVPool:
         self._rows: List[List[int]] = [[] for _ in range(n_rows)]
         # refcounts for every allocated physical page (absent == free)
         self._ref: Dict[int, int] = {}
-        # prefix index: cumulative token tuple -> physical page holding
-        # the K/V of its last page_size tokens (whole-chain keys, so a
-        # hit pins content exactly); _ext maps the chain BEFORE a page
-        # to (phys, page tokens) for sub-page extension matches
-        self._prefix: Dict[Tuple[int, ...], int] = {}
-        self._ext: Dict[Tuple[int, ...], Tuple[int, Tuple[int, ...]]] = {}
+        # prefix index, rolling chain keys: (parent_phys | -1, the page's
+        # own page_size tokens) -> physical page.  The parent id stands
+        # in for the whole chain before the page (it was indexed under
+        # ITS chain), so a hit pins content exactly while hashing O(ps)
+        # tokens per key instead of the whole cumulative prefix; _ext
+        # maps parent_phys | -1 -> (phys, page tokens) of the first page
+        # registered after it, for sub-page extension matches
+        self._prefix: Dict[Tuple[int, Tuple[int, ...]], int] = {}
+        self._ext: Dict[int, Tuple[int, Tuple[int, ...]]] = {}
         # reverse map: phys page -> its index keys, so a page leaving
         # the pool (refcount 0) drops its index entries before the free
-        # list can recycle the id under different contents
-        self._page_keys: Dict[int, List[Tuple[str, Tuple[int, ...]]]] = {}
+        # list can recycle the id under different contents.  A parent id
+        # inside a surviving key can never itself be recycled: sharing
+        # only ever aliases whole prefixes, so every row referencing a
+        # child page also references its parent (refcount(parent) >=
+        # refcount(child)) — a parent outlives every indexed child.
+        self._page_keys: Dict[int, List[Tuple[str, object]]] = {}
+        # token positions hashed while building index keys (register +
+        # plan) — the admission-cost counter the O(plen) test pins
+        self.index_ops = 0
 
     # -- sizing ---------------------------------------------------------------
 
@@ -235,18 +251,26 @@ class PagedKVPool:
         pages = self._rows[row]
         ps = self.page_size
         added = 0
+        parent = -1                        # chain root (no predecessor)
         for j in range(min(len(toks) // ps, len(pages))):
-            key = toks[:(j + 1) * ps]
-            if key in self._prefix:
+            page_toks = toks[j * ps:(j + 1) * ps]
+            self.index_ops += ps
+            key = (parent, page_toks)
+            hit = self._prefix.get(key)
+            if hit is not None:
+                # chain already indexed: keep walking down the CANONICAL
+                # phys chain so later keys parent off the indexed pages,
+                # not this row's duplicate copies
+                parent = hit
                 continue
             phys = pages[j]
             self._prefix[key] = phys
             self._page_keys.setdefault(phys, []).append(("p", key))
             added += 1
-            ext_key = toks[:j * ps]
-            if ext_key not in self._ext:
-                self._ext[ext_key] = (phys, toks[j * ps:(j + 1) * ps])
-                self._page_keys[phys].append(("e", ext_key))
+            if parent not in self._ext:
+                self._ext[parent] = (phys, page_toks)
+                self._page_keys[phys].append(("e", parent))
+            parent = phys
         return added
 
     def _drop_index(self, phys: int) -> None:
@@ -273,18 +297,22 @@ class PagedKVPool:
         ps = self.page_size
         total = self.pages_for(n_tokens)
         chain: List[int] = []
+        parent = -1
         while (len(chain) + 1) * ps <= len(toks):
-            phys = self._prefix.get(toks[:(len(chain) + 1) * ps])
+            page_toks = toks[len(chain) * ps:(len(chain) + 1) * ps]
+            self.index_ops += ps
+            phys = self._prefix.get((parent, page_toks))
             if phys is None:
                 break
             chain.append(phys)
+            parent = phys
         m = len(chain)
         # sub-page extension: the indexed page after the matched chain
         # may share a head of its tokens with ours — alias it and COW
         ext_phys: Optional[int] = None
         r = 0
         rest = toks[m * ps:]
-        ext = self._ext.get(toks[:m * ps]) if rest else None
+        ext = self._ext.get(parent) if rest else None
         if ext is not None:
             phys, content = ext
             while r < min(len(rest), ps) and rest[r] == content[r]:
@@ -391,6 +419,7 @@ class PagedKVPool:
                 "pages_owned": self.pages_owned,
                 "pages_shared": self.pages_shared,
                 "prefix_entries": self.prefix_entries,
+                "index_ops": self.index_ops,
                 "budget": self._budget,
                 "conservation_ok": self.conservation_ok()}
 

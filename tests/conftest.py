@@ -1,4 +1,16 @@
-"""Shared test configuration: pinned hypothesis profiles.
+"""Shared test configuration: jax cache hygiene + hypothesis profiles.
+
+A full-suite run compiles thousands of XLA executables into one
+long-lived process; on single-core CPU runners the accumulated
+LLVM-JIT state eventually crashes ``backend_compile`` outright
+(SIGSEGV deep in XLA, deterministic at whichever compile crosses the
+wall — observed at ~85% of the suite on the pre-PR-10 tree too, so it
+is an environment ceiling, not a regression signal).  Dropping every
+cached executable at module boundaries keeps the live JIT footprint
+bounded at the cost of recompiling shared helpers per module, which
+the interpret-mode suite tolerates.  Per-test trace/retrace
+assertions are unaffected: every test builds its closures and
+counters fresh, and the clear runs only between modules.
 
 The CI property lane (``test-property`` in .github/workflows/ci.yml)
 runs the slow-marked hypothesis suites under the deterministic ``ci``
@@ -10,6 +22,17 @@ deadline for the same reason.  Import-gated: environments without
 hypothesis still run every seeded fallback test.
 """
 import os
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jax_jit_footprint():
+    """Release every cached XLA executable once a test module finishes."""
+    yield
+    jax.clear_caches()
+
 
 try:
     from hypothesis import HealthCheck, settings

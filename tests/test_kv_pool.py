@@ -257,3 +257,32 @@ def test_report_owned_vs_shared():
     assert rep["pages_owned"] == rep["pages_in_use"] - 2
     assert rep["prefix_entries"] == 2
     assert rep["conservation_ok"] is True
+
+
+# -- admission cost: the rolling chain key is O(plen), not O(plen^2) ----------
+
+
+def test_prefix_index_cost_linear_in_prompt_length():
+    """The rolling chain key hashes exactly page_size tokens per page
+    (the parent phys id stands in for everything before it), so
+    registering a prompt costs plen hashed positions — the old
+    cumulative-prefix keys cost ps*(1+2+..+n) ~ plen^2/(2*ps).  Pinned
+    by the index_ops counter: doubling the prompt EXACTLY doubles the
+    count, and a full-chain plan walk is linear too."""
+    pool = PagedKVPool(64, page_size=4, max_len=128, n_rows=4)
+    short = list(range(100, 132))                # 32 tokens = 8 pages
+    long_ = list(range(500, 564))                # 64 tokens, disjoint
+    pool.alloc(0, len(short))
+    pool.register_prefix(0, short)
+    ops_short = pool.index_ops
+    pool.alloc(1, len(long_))
+    pool.register_prefix(1, long_)
+    ops_long = pool.index_ops - ops_short
+    assert ops_short == len(short)               # quadratic would be 144
+    assert ops_long == 2 * ops_short
+    # planning against the index walks one ps-token key per matched
+    # page plus the one that misses: linear with a one-page epsilon
+    before = pool.index_ops
+    plan = pool.plan_shared(64, long_[:48] + [7] * 16)
+    assert plan["shared_tokens"] == 48
+    assert pool.index_ops - before <= 48 + 2 * pool.page_size
