@@ -5,7 +5,9 @@ gather-then-SDPA **scratch** lane (bitwise vs ``paged_attention_ref``
 and the dense ``_sdpa`` path — the small-window fast path and oracle)
 and the block-streamed online-softmax **streamed** lane
 (``paged_attention_streamed``: scalar-prefetch page table,
-double-buffered page-block prefetch, O(block_pages) VMEM — bounded-ulp
+double-buffered page-block prefetch, O(block_pages) VMEM scratch —
+``streamed_lane_resident_bytes`` accounts the full residency of the
+current whole-pool lowering — bounded-ulp
 + argmax-stable vs the scratch lane, pinned against its own block-order
 oracle ``paged_attention_streamed_ref``).  Dispatches land in
 ``crossstack_dispatch_total{path=paged_*}``; ``paged_path_calls`` is
@@ -16,6 +18,7 @@ from repro.kernels.paged_attention.kernel import (
     paged_attention_streamed,
     resolve_block_pages,
     scratch_lane_vmem_bytes,
+    streamed_lane_resident_bytes,
     streamed_lane_vmem_bytes,
 )
 from repro.kernels.paged_attention.ops import (
@@ -31,5 +34,5 @@ __all__ = [
     "paged_attention", "paged_attention_ref", "paged_attention_streamed",
     "paged_attention_streamed_ref", "paged_path_calls",
     "resolve_block_pages", "scratch_lane_vmem_bytes",
-    "streamed_lane_vmem_bytes",
+    "streamed_lane_resident_bytes", "streamed_lane_vmem_bytes",
 ]

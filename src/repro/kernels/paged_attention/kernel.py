@@ -38,11 +38,24 @@ operands (``compat.prefetch_grid_spec`` →
 ``pltpu.PrefetchScalarGridSpec``; on TPU the table is in SMEM before
 the first DMA issues).  Each step gathers ONE page block of K/V into a
 two-slot VMEM scratch ring — block j+1 prefetches into the other slot
-while block j is attended (double-buffering: on TPU the gather DMA
-overlaps the MXU dots; the interpreter preserves the schedule) — and
-folds it into running max / denominator / accumulator scratch carried
-across grid steps.  Peak VMEM is O(block_pages)
-(``streamed_lane_vmem_bytes``), INDEPENDENT of window length.
+while block j is attended — and folds it into running max /
+denominator / accumulator scratch carried across grid steps.
+
+The O(block_pages) claim is about the *scratch* (the ring + the f32
+online-softmax stats, ``streamed_lane_vmem_bytes``): it is constant in
+the window length, which is what lets ``block_pages`` cap the working
+set the attention math touches per step.  It is NOT yet the kernel's
+total VMEM residency on a real TPU lowering: the current ``in_specs``
+map the whole K/V pools as single full-array blocks (the body gathers
+with ``k_ref[...][page_ids]``), which the CPU interpreter streams
+lazily but a Mosaic lowering would make resident —
+``streamed_lane_resident_bytes`` accounts that honestly (scratch +
+2×pool), and the paged bench records both numbers.  Finishing the TPU
+port means replacing the one-shot gather with per-block DMA out of
+HBM-resident pools (``pltpu.make_async_copy`` indexed by the
+prefetched table, or per-page index maps through the scalar-prefetch
+operands); the slot arithmetic, the scratch layout and the numerics
+below do not change — see docs/KERNELS.md "Porting notes".
 
 Numerics contract per lane: the scratch lane is bitwise vs ref.py and
 the dense ``_sdpa`` (the paged≡dense stream oracle).  The streamed lane
@@ -264,6 +277,11 @@ def paged_attention_streamed(q, k_pages, v_pages, page_table, kv_len,
         grid=(n_blocks,),
         in_specs=[
             pl.BlockSpec((b, sq, hq, hd), lambda j, *_: (0, 0, 0, 0)),
+            # the K/V pools ride as single whole-array blocks: fine for
+            # the interpreter (lazy gather), but VMEM-resident under a
+            # real Mosaic lowering — streamed_lane_resident_bytes counts
+            # them; the TPU port swaps these for per-block DMA (module
+            # docstring)
             pl.BlockSpec((p1, ps, kv, hd), lambda j, *_: (0, 0, 0, 0)),
             pl.BlockSpec((p1, ps, kv, hd), lambda j, *_: (0, 0, 0, 0)),
         ],
@@ -304,12 +322,31 @@ def scratch_lane_vmem_bytes(pages_per_seq: int, page_size: int, kv: int,
 def streamed_lane_vmem_bytes(b: int, sq: int, hq: int, kv: int, hd: int,
                              pages_per_seq: int, page_size: int,
                              block_pages: int, kv_dtype) -> int:
-    """Peak VMEM scratch of the streamed lane: the two-slot K/V block
-    ring plus the f32 running max/denominator/accumulator — a function
-    of ``block_pages``, NOT of the window length."""
+    """VMEM *scratch* of the streamed lane: the two-slot K/V block ring
+    plus the f32 running max/denominator/accumulator — a function of
+    ``block_pages``, NOT of the window length.  This is the working set
+    the per-step attention math touches; it is not the lowering's total
+    residency (see :func:`streamed_lane_resident_bytes`)."""
     bp = resolve_block_pages(pages_per_seq, block_pages)
     itemsize = jnp.dtype(kv_dtype).itemsize
     g = hq // kv
     ring = 2 * 2 * b * bp * page_size * kv * hd * itemsize
     stats = (2 * b * kv * g * sq + b * kv * g * sq * hd) * 4
     return ring + stats
+
+
+def streamed_lane_resident_bytes(b: int, sq: int, hq: int, kv: int,
+                                 hd: int, pages_per_seq: int,
+                                 page_size: int, block_pages: int,
+                                 n_pool_pages: int, kv_dtype) -> int:
+    """Total VMEM the CURRENT lowering would hold resident on real TPU:
+    the scratch above plus the two whole K/V pools that the full-array
+    ``in_specs`` pin per grid step (``n_pool_pages`` includes the null
+    page).  Honest accounting for the interpret-mode-only gap the TPU
+    port closes — once the gather becomes per-block HBM DMA this
+    collapses to :func:`streamed_lane_vmem_bytes`."""
+    itemsize = jnp.dtype(kv_dtype).itemsize
+    pools = 2 * n_pool_pages * page_size * kv * hd * itemsize
+    return streamed_lane_vmem_bytes(b, sq, hq, kv, hd, pages_per_seq,
+                                    page_size, block_pages,
+                                    kv_dtype) + pools

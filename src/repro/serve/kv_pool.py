@@ -31,6 +31,12 @@ old cumulative-tuple keys (page j keyed on ``T[:(j+1)*page_size]``)
 cost O(plen²).  ``index_ops`` counts token positions hashed;
 tests/test_kv_pool.py pins the linear scaling.  A later admission with
 a matching head aliases indexed pages instead of recomputing them.
+Because chain keys embed a *recyclable* physical id, every key that
+names a page as its parent is also registered for cleanup under that
+parent: when the parent's last reference drops, those keys leave the
+index with it, so a recycled id can never satisfy a stale
+``(parent, page_tokens)`` lookup and alias K/V computed under a
+different prefix (tests/test_kv_pool.py pins the regression).
 Sharing always stops at least one token short of the prompt end (the
 final token must flow through the model to produce the first output
 logits), and a sub-page extension match (the next page's tokens agree
@@ -95,13 +101,17 @@ class PagedKVPool:
         # registered after it, for sub-page extension matches
         self._prefix: Dict[Tuple[int, Tuple[int, ...]], int] = {}
         self._ext: Dict[int, Tuple[int, Tuple[int, ...]]] = {}
-        # reverse map: phys page -> its index keys, so a page leaving
-        # the pool (refcount 0) drops its index entries before the free
-        # list can recycle the id under different contents.  A parent id
-        # inside a surviving key can never itself be recycled: sharing
-        # only ever aliases whole prefixes, so every row referencing a
-        # child page also references its parent (refcount(parent) >=
-        # refcount(child)) — a parent outlives every indexed child.
+        # reverse map: phys page -> index records to purge when the page
+        # leaves the pool (refcount 0), BEFORE the free list can recycle
+        # the id under different contents.  Two record flavors per page:
+        # keys whose VALUE is the page, and keys that EMBED the page's
+        # id as the chain parent.  The second flavor is load-bearing: a
+        # registration that hits an existing key chains off the CANONICAL
+        # page (which the registering row may not reference at all), so
+        # refcount(parent) >= refcount(child) does NOT hold in general —
+        # the parent can free first, and any surviving (parent, tokens)
+        # key would silently alias wrong-content K/V once the id is
+        # recycled.  _drop_index therefore removes both flavors.
         self._page_keys: Dict[int, List[Tuple[str, object]]] = {}
         # token positions hashed while building index keys (register +
         # plan) — the admission-cost counter the O(plen) test pins
@@ -266,20 +276,37 @@ class PagedKVPool:
             phys = pages[j]
             self._prefix[key] = phys
             self._page_keys.setdefault(phys, []).append(("p", key))
+            if parent != -1:
+                # the key embeds the parent's phys id — make it reachable
+                # from the parent too, so _drop_index(parent) purges it
+                # even when this row holds no reference on the parent
+                # (the stale-key recycling hazard; see _page_keys above)
+                self._page_keys.setdefault(parent, []).append(("p", key))
             added += 1
             if parent not in self._ext:
                 self._ext[parent] = (phys, page_toks)
                 self._page_keys[phys].append(("e", parent))
+                if parent != -1:
+                    self._page_keys[parent].append(("e", parent))
             parent = phys
         return added
 
     def _drop_index(self, phys: int) -> None:
+        """Purge every index entry that could resolve through ``phys``
+        once its id recycles: keys whose value is the page, AND keys /
+        ``_ext`` slots that embed its id as the chain parent.  Records
+        left behind in a *child's* list after its parent-key was purged
+        here are harmless: the guards below no-op on a missing key, and
+        a key re-created under a recycled parent id never matches the
+        stale record's value test."""
         for kind, key in self._page_keys.pop(phys, ()):
-            table = self._prefix if kind == "p" else self._ext
-            entry = table.get(key)
-            if entry == phys or (isinstance(entry, tuple)
-                                 and entry[0] == phys):
-                del table[key]
+            if kind == "p":
+                if key[0] == phys or self._prefix.get(key) == phys:
+                    self._prefix.pop(key, None)
+            else:
+                entry = self._ext.get(key)
+                if key == phys or (entry is not None and entry[0] == phys):
+                    self._ext.pop(key, None)
 
     @property
     def prefix_entries(self) -> int:

@@ -215,6 +215,41 @@ def test_freed_pages_leave_the_prefix_index():
     assert plan["shared_tokens"] == 0 and not plan["aliased"]
 
 
+def test_recycled_parent_id_cannot_alias_stale_chain_keys():
+    """REVIEW regression: a registration that hits an existing key
+    chains its diverging tail off the CANONICAL page's phys id even
+    though the registering row holds no reference on that page.  When
+    the canonical owner frees first, every surviving key embedding the
+    freed id must leave the index with it — otherwise the recycled id
+    satisfies the stale (parent, tokens) lookup and a later plan aliases
+    a page whose K/V was computed under a DIFFERENT prefix."""
+    pool = _pool(n_pages=8, page_size=4, max_len=16, n_rows=4)
+    h0, h1 = list(range(10, 14)), list(range(14, 18))
+    y = [50, 51, 52, 53]
+    pages0 = pool.alloc(0, 8)
+    pool.register_prefix(0, h0 + h1)
+    # row 1 arrives with its own PRIVATE copy of the H0 prefix (admitted
+    # before row 0's pages were indexed), tail Y diverging: registration
+    # hits (root, H0), walks onto row 0's canonical page, and indexes
+    # row 1's Y page under that phys id
+    pool.alloc(1, 8)
+    pool.register_prefix(1, h0 + y)
+    # canonical owner leaves; row 1 (still resident) never referenced
+    # row 0's pages, so their ids return to the free list
+    pool.free_row(0)
+    # a new prompt G recycles row 0's first page id under new contents
+    g = [90, 91, 92, 93]
+    pages2 = pool.alloc(2, 8)
+    assert pages2[0] == pages0[0]          # the id really was recycled
+    pool.register_prefix(2, g)
+    # planning G+Y must alias ONLY the live G page — row 1's Y page was
+    # conditioned on H0, not G, and must be unreachable via the chain
+    plan = pool.plan_shared(12, g + y + [7])
+    assert plan["shared_tokens"] == 4
+    assert plan["aliased"] == [pages2[0]]
+    assert pool.conservation_ok()
+
+
 def test_budget_gates_shared_plans_on_fresh_pages_only():
     """Aliased pages cost no new allocation: a shared plan fits as long
     as its FRESH remainder fits the budget, so sharing admits where a

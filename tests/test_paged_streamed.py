@@ -34,7 +34,7 @@ from repro import obs
 from repro.kernels.paged_attention import (
     paged_attention, paged_attention_streamed, paged_attention_streamed_ref,
     paged_path_calls, resolve_block_pages, scratch_lane_vmem_bytes,
-    streamed_lane_vmem_bytes)
+    streamed_lane_resident_bytes, streamed_lane_vmem_bytes)
 from repro.kernels.paged_attention import ops as paged_ops
 from repro.kernels.paged_attention.kernel import paged_attention_kernel
 from repro.kernels.paged_attention.ref import gather_pages
@@ -268,7 +268,11 @@ def test_streamed_failure_warns_once_and_falls_back_to_scratch_kernel(
 def test_streamed_vmem_constant_while_scratch_grows_linearly():
     """The tentpole's point: the scratch lane's gather buffer is linear
     in the window; the streamed lane's ring + online-softmax stats do
-    not depend on it at all."""
+    not depend on it at all.  The honest companion number: the CURRENT
+    lowering maps the whole K/V pools as input blocks, so its total
+    residency is scratch + 2x pool — accounted (and pinned) separately
+    so the O(block) claim never silently overstates what a real-TPU
+    lowering would hold."""
     geom = dict(page_size=8, kv=2, hd=64, kv_dtype=jnp.bfloat16)
     windows = (16, 32, 64, 128, 256)
     scratch = [scratch_lane_vmem_bytes(p, geom["page_size"], geom["kv"],
@@ -282,6 +286,21 @@ def test_streamed_vmem_constant_while_scratch_grows_linearly():
     for a, b, pa, pb in zip(scratch, scratch[1:], windows, windows[1:]):
         assert b * pa == a * pb                   # exactly linear
     assert streamed[0] < scratch[-1]              # and it actually pays off
+    # resident = scratch + both pools, exactly; grows with the pool (one
+    # full-depth row per window here), NOT constant — the accounting
+    # must not launder pool residency into the O(block) claim
+    itemsize = jnp.dtype(geom["kv_dtype"]).itemsize
+    resident = []
+    for p in windows:
+        n_pool = 4 * p + 1
+        r = streamed_lane_resident_bytes(4, 1, 8, geom["kv"], geom["hd"],
+                                         p, geom["page_size"], 16,
+                                         n_pool, geom["kv_dtype"])
+        pools = 2 * n_pool * geom["page_size"] * geom["kv"] * geom["hd"] \
+            * itemsize
+        assert r == streamed[0] + pools
+        resident.append(r)
+    assert len(set(resident)) == len(windows)
 
 
 # -- scheduler property: long-prompt admission, zero retraces -----------------
